@@ -1,0 +1,22 @@
+"""Paper §VI-B.2 / Fig 8: device-master access latency to host memory as a
+function of message size (600-964 ns for <= 2048 B)."""
+from repro.core.rdma.simulator import simulate_host_access
+
+SIZES = [64, 128, 256, 512, 1024, 2048, 4096, 16384]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for n in SIZES:
+        lat = simulate_host_access(n)
+        rows.append((f"host_access_{n}B", lat * 1e6, f"{lat*1e9:.0f}ns"))
+    ok_small = abs(simulate_host_access(64) - 600e-9) < 60e-9
+    ok_2k = abs(simulate_host_access(2048) - 964e-9) < 96e-9
+    rows.append(("host_access_fig8_anchors", 0.0,
+                 f"600ns@64B={'PASS' if ok_small else 'FAIL'},"
+                 f"964ns@2KB={'PASS' if ok_2k else 'FAIL'}"))
+    assert ok_small and ok_2k
+    if verbose:
+        for n, us, d in rows:
+            print(f"{n},{us:.3f},{d}")
+    return rows

@@ -1,0 +1,80 @@
+"""Lookaside/streaming kernel microbenchmarks (paper §IV-C/D).
+
+CPU numbers time the jitted XLA path (the interpret-mode Pallas kernels
+validate correctness, not speed); the derived column reports achieved
+GFLOP/s or GB/s on this container plus the kernel<->oracle max error.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.streaming.classifier import make_roce_header
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, iters=5):
+    fn(*args)  # warmup/compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def run(verbose: bool = True):
+    rng = np.random.default_rng(0)
+    rows = []
+
+    # systolic matmul (lookaside: paper's own example kernel)
+    m = k = n = 512
+    x = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    err = float(jnp.max(jnp.abs(ops.matmul(x, y) - ref.ref_matmul(x, y))))
+    dt = _time(lambda a, b: jnp.dot(a, b), x, y)
+    rows.append((f"lookaside_mm_{m}", dt * 1e6,
+                 f"{2*m*k*n/dt/1e9:.1f}GFLOPs,kernel_err={err:.1e}"))
+
+    # flash attention (lookaside hot-spot)
+    q = jnp.asarray(rng.normal(size=(4, 256, 4, 64)), jnp.float32)
+    kk = jnp.asarray(rng.normal(size=(4, 256, 2, 64)), jnp.float32)
+    vv = jnp.asarray(rng.normal(size=(4, 256, 2, 64)), jnp.float32)
+    got = ops.attention(q, kk, vv, causal=True, block_q=64, block_k=64)
+    kr = jnp.repeat(kk, 2, axis=2)
+    vr = jnp.repeat(vv, 2, axis=2)
+    want = ref.ref_attention(
+        q.transpose(0, 2, 1, 3).reshape(16, 256, 64),
+        kr.transpose(0, 2, 1, 3).reshape(16, 256, 64),
+        vr.transpose(0, 2, 1, 3).reshape(16, 256, 64), causal=True
+    ).reshape(4, 4, 256, 64).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(got - want)))
+    rows.append(("lookaside_flash_attn_256", 0.0, f"kernel_err={err:.1e}"))
+
+    # streaming quantize (SC compression): time the jitted XLA-equivalent
+    # (interpret-mode Pallas is a correctness oracle, not a speed path);
+    # check kernel == oracle on a slice.
+    g = jnp.asarray(rng.normal(size=(1 << 20,)), jnp.float32)
+    g2d = g.reshape(-1, 1024)
+    qfast = jax.jit(ref.ref_quantize)
+    dt = _time(lambda a: qfast(a)[0], g2d)
+    qk, sk = ops.compress(g[: 64 * 1024], chunk=1024)[:2]
+    qr, sr = ref.ref_quantize(g[: 64 * 1024].reshape(-1, 1024))
+    err = int(jnp.abs(qk.astype(jnp.int32)
+                      - qr.astype(jnp.int32)).max())
+    rows.append(("streaming_quantize_4MB", dt * 1e6,
+                 f"{g.nbytes/dt/1e9:.2f}GBps,kernel_err={err},ratio="
+                 f"{(g.nbytes//4 + (g.size//1024)*4)/g.nbytes:.3f}"))
+
+    # streaming packet parser (SC classification)
+    pkts = jnp.asarray(np.stack(
+        [make_roce_header(i % 18, i) for i in range(4096)]))
+    meta = ops.classify_packets(pkts)
+    err = int(jnp.abs(meta - ref.ref_parse_packets(pkts)).max())
+    dt = _time(ops.classify_packets, pkts)
+    rows.append(("streaming_packet_parse_4096", dt * 1e6,
+                 f"{4096/dt/1e6:.1f}Mpps,kernel_err={err}"))
+
+    if verbose:
+        for nme, us, d in rows:
+            print(f"{nme},{us:.3f},{d}")
+    return rows

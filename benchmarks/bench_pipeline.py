@@ -1,0 +1,31 @@
+"""Pipeline-parallel schedule characterization (scale-out posture).
+
+GPipe bubble fraction vs microbatch count, and the modeled stage-transfer
+cost (PIPELINE_ACT traffic = RDMA WRITE+IMM per tick) on the v5e ICI —
+the cross-pod pipelining trade the elastic controller uses.
+"""
+from repro.core.rdma.cost_model import TPU_V5E
+from repro.train.pipeline_parallel import bubble_fraction
+
+
+def run(verbose: bool = True):
+    rows = []
+    hw = TPU_V5E
+    # activation microbatch: (B_mb=8, S=4096, d=4096) bf16 across a pod
+    # boundary per tick
+    act_bytes = 8 * 4096 * 4096 * 2
+    for stages in (2, 4, 8):
+        for mb in (stages, 4 * stages, 16 * stages):
+            bubble = bubble_fraction(stages, mb)
+            ticks = mb + stages - 1
+            xfer = act_bytes / hw.ici_bw_per_link + hw.alpha_dispatch
+            rows.append((f"pp_s{stages}_mb{mb}", xfer * 1e6,
+                         f"bubble={bubble:.3f},ticks={ticks},"
+                         f"xfer_per_tick={xfer*1e3:.2f}ms"))
+            assert 0 <= bubble < 1
+    # doubling microbatches must shrink the bubble
+    assert bubble_fraction(4, 32) < bubble_fraction(4, 16)
+    if verbose:
+        for n, us, d in rows:
+            print(f"{n},{us:.3f},{d}")
+    return rows

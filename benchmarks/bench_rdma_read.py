@@ -1,0 +1,39 @@
+"""Paper Figs 9+10: RDMA READ throughput/latency vs payload, single-request
+vs batch-requests (n=50). Emits the sweep as CSV and validates the paper's
+stated anchors."""
+from repro.core.rdma.simulator import simulate_rdma
+
+PAYLOADS = [256, 1024, 4096, 8192, 16384, 32768, 65536, 131072, 262144]
+ANCHORS = [  # (payload, batch, metric, paper value, rtol)
+    (16384, 1, "gbps", 18.0, 0.10),
+    (16384, 50, "gbps", 89.0, 0.05),
+    (32768, 50, "gbps", 92.0, 0.05),
+    (4096, 50, "lat_ns", 400.0, 0.35),
+]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for batch in (1, 50):
+        for p in PAYLOADS:
+            r = simulate_rdma("read", p, batch)
+            mode = "single" if batch == 1 else "batch50"
+            rows.append((f"rdma_read_{mode}_{p}B",
+                         r.latency_per_op * 1e6,
+                         f"{r.throughput_bps/1e9:.2f}Gbps"))
+    checks = []
+    for payload, batch, metric, want, rtol in ANCHORS:
+        r = simulate_rdma("read", payload, batch)
+        got = (r.throughput_bps / 1e9 if metric == "gbps"
+               else r.latency_per_op * 1e9)
+        ok = abs(got - want) <= rtol * want
+        checks.append((payload, batch, metric, want, got, ok))
+    if verbose:
+        for n, us, d in rows:
+            print(f"{n},{us:.3f},{d}")
+        for c in checks:
+            print(f"rdma_read_anchor_{c[0]}B_b{c[1]},0.0,"
+                  f"paper={c[3]} got={c[4]:.1f} "
+                  f"{'PASS' if c[5] else 'FAIL'}")
+    assert all(c[5] for c in checks), f"anchor mismatch: {checks}"
+    return rows

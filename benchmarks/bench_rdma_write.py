@@ -1,0 +1,25 @@
+"""Paper Figs 11+12: RDMA WRITE throughput/latency — the paper states the
+trends are 'similar to those of RDMA read'; we sweep and check similarity."""
+from repro.core.rdma.simulator import simulate_rdma
+
+PAYLOADS = [256, 1024, 4096, 16384, 32768, 131072]
+
+
+def run(verbose: bool = True):
+    rows = []
+    for batch in (1, 50):
+        for p in PAYLOADS:
+            w = simulate_rdma("write", p, batch)
+            r = simulate_rdma("read", p, batch)
+            mode = "single" if batch == 1 else "batch50"
+            similar = abs(w.throughput_bps - r.throughput_bps) \
+                <= 0.15 * r.throughput_bps
+            rows.append((f"rdma_write_{mode}_{p}B",
+                         w.latency_per_op * 1e6,
+                         f"{w.throughput_bps/1e9:.2f}Gbps,"
+                         f"similar_to_read={'PASS' if similar else 'FAIL'}"))
+            assert similar
+    if verbose:
+        for n, us, d in rows:
+            print(f"{n},{us:.3f},{d}")
+    return rows

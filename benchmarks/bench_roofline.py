@@ -1,0 +1,44 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json (produced by repro.launch.dryrun) and
+emits the per-cell three-term table. Does not recompile anything."""
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+
+def load_records(mesh: str = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(path))
+        if not r.get("ok"):
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(verbose: bool = True):
+    rows = []
+    recs = load_records()
+    for r in recs:
+        name = f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}"
+        bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append((name, bound * 1e6,
+                     f"c={r['compute_s']*1e3:.1f}ms,"
+                     f"m={r['memory_s']*1e3:.1f}ms,"
+                     f"n={r['collective_s']*1e3:.1f}ms,"
+                     f"dom={r['dominant']},"
+                     f"useful={r['useful_ratio']:.2f},"
+                     f"roofline_frac={r['roofline_fraction']:.3f}"))
+    if not rows:
+        rows.append(("roofline_no_dryrun_artifacts", 0.0,
+                     "run: python -m repro.launch.dryrun --all --mesh both"))
+    if verbose:
+        for n, us, d in rows:
+            print(f"{n},{us:.3f},{d}")
+    return rows

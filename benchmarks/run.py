@@ -1,0 +1,42 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows. Anchor rows validate the simulator against the paper's own
+# measured numbers (EXPERIMENTS.md cross-references each section).
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_dma, bench_grad_buckets,
+                            bench_host_latency, bench_kernels,
+                            bench_pipeline, bench_rdma_read,
+                            bench_rdma_write, bench_roofline)
+
+    sections = [
+        ("Fig9/10 RDMA read (single vs batch)", bench_rdma_read.run),
+        ("Fig11/12 RDMA write", bench_rdma_write.run),
+        ("SecVI-B.1 DMA throughput", bench_dma.run),
+        ("SecVI-B.2/Fig8 host access latency", bench_host_latency.run),
+        ("SecVI-C doorbell batching -> gradient buckets",
+         bench_grad_buckets.run),
+        ("grad bucket dispatch counts (lowered HLO)",
+         bench_grad_buckets.run_dispatch_counts),
+        ("SecIV-C/D compute-block kernels", bench_kernels.run),
+        ("pipeline-parallel schedule (scale-out)", bench_pipeline.run),
+        ("Roofline table (from dry-run artifacts)", bench_roofline.run),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for title, fn in sections:
+        print(f"# --- {title} ---")
+        try:
+            fn(verbose=True)
+        except Exception as e:  # report and continue
+            failures += 1
+            print(f"{title.replace(' ', '_')},0.0,ERROR:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmark section(s) failed")
+
+
+if __name__ == '__main__':
+    main()

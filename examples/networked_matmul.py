@@ -1,0 +1,96 @@
+"""Networked systolic-array matrix multiplication — the paper's §IV-C
+lookaside-compute example (Fig 6), step for step.
+
+Peer 1 holds the matrices ("data node"); peer 2 is the RecoNIC node whose
+lookaside kernel (the Pallas systolic MM, = the TPU MXU) computes. The
+host CPU drives the 8-step workflow:
+
+  (1) init + connection setup          (5) read-completion CQEs
+  (2) build WQEs in the SQ             (6) control msg -> LC kernel
+  (3) ring the SQ doorbell ONCE        (7) poll kernel status FIFO
+  (4) wait on CQ doorbells             (8) results ready, next request
+
+    PYTHONPATH=src python examples/networked_matmul.py
+"""
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lookaside import ControlMsg, LookasideBlock
+from repro.core.memory import BufferPool
+from repro.core.rdma import Opcode, RDMAEngine, WQE
+from repro.kernels import ops as kops
+
+M = 32          # matrix dim (the Pallas kernel pads to MXU-aligned tiles)
+DATA_PEER, NIC_PEER = 0, 1
+
+
+def main():
+    # ---- (1) system init + "connection" setup ---------------------------
+    eng = RDMAEngine(n_peers=2, pool_size=4 * M * M + 1024)
+    lc = LookasideBlock(eng)    # compute blocks share the engine (paper §I)
+    data_pool = BufferPool(eng, DATA_PEER)
+    nic_pool = BufferPool(eng, NIC_PEER)
+
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(M, M)).astype(np.float32)
+    B = rng.normal(size=(M, M)).astype(np.float32)
+    a_src = data_pool.alloc(M * M)
+    b_src = data_pool.alloc(M * M)
+    data_pool.write(a_src, A.reshape(-1))
+    data_pool.write(b_src, B.reshape(-1))
+    print(f"(1) peer{DATA_PEER} holds A,B ({M}x{M}); "
+          f"peer{NIC_PEER} is the RecoNIC compute node")
+
+    a_dst = nic_pool.alloc(M * M)
+    b_dst = nic_pool.alloc(M * M)
+    c_dst = nic_pool.alloc(M * M)
+    qp = eng.create_qp(NIC_PEER, DATA_PEER)
+    eng.create_qp(DATA_PEER, NIC_PEER)
+
+    # ---- (2)+(3) WQEs in SQ, ONE doorbell for the batch ------------------
+    eng.post_send(qp, WQE(Opcode.READ, qp.qp_num, 1, local_addr=a_dst.base,
+                          remote_addr=a_src.base, length=M * M,
+                          rkey=a_src.rkey))
+    eng.post_send(qp, WQE(Opcode.READ, qp.qp_num, 2, local_addr=b_dst.base,
+                          remote_addr=b_src.base, length=M * M,
+                          rkey=b_src.rkey))
+    d0 = eng.transport.dispatch_count
+    eng.ring_sq_doorbell(qp)
+    print(f"(2)(3) 2 READ WQEs posted, doorbell rung once "
+          f"(dispatches: {eng.transport.dispatch_count - d0})")
+
+    # ---- (4)+(5) poll CQ ---------------------------------------------------
+    cqes = eng.poll_cq(qp)
+    assert len(cqes) == 2 and all(c.status.value == "success" for c in cqes)
+    print(f"(4)(5) {len(cqes)} read completions")
+
+    # ---- (6) control message -> systolic-array kernel ----------------------
+    def systolic_mm_kernel(engine, a_addr, b_addr, c_addr, m):
+        x = engine.read_buffer(NIC_PEER, a_addr, m * m).reshape(m, m)
+        y = engine.read_buffer(NIC_PEER, b_addr, m * m).reshape(m, m)
+        z = np.asarray(kops.matmul(jnp.asarray(x), jnp.asarray(y)))
+        engine.write_buffer(NIC_PEER, c_addr, z.reshape(-1))
+        return c_addr
+
+    lc.register(1, systolic_mm_kernel, "systolic_mm")
+    t0 = time.perf_counter()
+    lc.dispatch(ControlMsg(1, (a_dst.base, b_dst.base, c_dst.base, M),
+                           tag=99))
+    # ---- (7) poll the status FIFO ------------------------------------------
+    status = lc.poll(1)
+    assert status is not None and status.ok
+    print(f"(6)(7) kernel done in {(time.perf_counter()-t0)*1e3:.1f} ms, "
+          f"status tag={status.tag} result@{status.result_addr}")
+
+    # ---- (8) verify + done --------------------------------------------------
+    C = nic_pool.read(c_dst).reshape(M, M)
+    err = float(np.abs(C - A @ B).max())
+    print(f"(8) max |C - A@B| = {err:.2e}")
+    assert err < 1e-3
+    print("OK — Fig 6 workflow reproduced")
+
+
+if __name__ == "__main__":
+    main()

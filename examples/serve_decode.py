@@ -1,0 +1,74 @@
+"""Batched serving with paged KV cache + RDMA page migration.
+
+Serves a small model with batched requests (prefill -> decode), then
+migrates a finished sequence's KV pages between peers as ONE doorbell
+batch of RDMA READs — the disaggregated prefill/decode pattern.
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import get_config
+from repro.core.rdma import RDMAEngine
+from repro.core.streaming.classifier import TrafficClass, TrafficRouter
+from repro.models import init_caches, init_params
+from repro.serve import decode_step, prefill_step
+from repro.serve.kv_cache import PagedKVPool, migrate_sequence
+
+
+def main():
+    cfg = get_config("tiny")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    batch, prompt_len, gen_len, max_seq = 8, 32, 16, 64
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
+                                       (batch, prompt_len)), jnp.int32)
+
+    # ---- prefill ---------------------------------------------------------
+    caches = init_caches(cfg, batch, max_seq, jnp.float32)
+    t0 = time.perf_counter()
+    logits, caches = prefill_step(params, cfg, {"tokens": prompts}, caches)
+    print(f"prefill: {batch} reqs x {prompt_len} tokens "
+          f"in {(time.perf_counter()-t0)*1e3:.0f} ms")
+
+    # ---- decode (continuous batch of 8) -----------------------------------
+    step = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    t0 = time.perf_counter()
+    outs = [tok]
+    for i in range(gen_len - 1):
+        logits, caches = step(params, tok, caches,
+                              jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        outs.append(tok)
+    dt = time.perf_counter() - t0
+    print(f"decode : {gen_len} steps, "
+          f"{batch*(gen_len-1)/dt:.1f} tokens/s (batched)")
+    print("sample :", jnp.concatenate(outs, 1)[0].tolist())
+
+    # ---- KV page migration (prefill node -> decode node) -------------------
+    eng = RDMAEngine(n_peers=2, pool_size=1 << 14)
+    router = TrafficRouter()
+    prefill_pool = PagedKVPool(eng, 0, page_elems=256, max_pages=16)
+    decode_pool = PagedKVPool(eng, 1, page_elems=256, max_pages=16)
+    for _ in range(4):   # 4 KV pages for sequence 7
+        p = prefill_pool.append_page(seq_id=7)
+        prefill_pool.write_page(p, rng.normal(size=256).astype(np.float32))
+    qp = eng.create_qp(1, 0)
+    eng.create_qp(0, 1)
+    d0 = eng.transport.dispatch_count
+    n = migrate_sequence(eng, router, prefill_pool, decode_pool, 7, qp)
+    print(f"migrate: {n} KV pages prefill->decode, "
+          f"{eng.transport.dispatch_count - d0} doorbell(s), "
+          f"traffic={router.counters[TrafficClass.KV_PAGE]}")
+    assert decode_pool.seq_len_pages(7) == 4
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,34 @@
+"""End-to-end driver: train the ~100M-parameter config for a few hundred
+steps with checkpoint/restart, doorbell-batched gradient planning and
+traffic telemetry (wraps repro.launch.train).
+
+Full run (CPU, ~10-20 min):
+    PYTHONPATH=src python examples/train_100m.py
+Smoke run:
+    PYTHONPATH=src python examples/train_100m.py --steps 5 --seq 64
+"""
+import argparse
+import json
+
+from repro.launch.train import run
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt-dir", default="/tmp/reconic_100m_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    res = run("train-100m", steps=args.steps, batch=args.batch,
+              seq=args.seq, ckpt_dir=args.ckpt_dir, resume=args.resume,
+              log_every=10, lr=1e-3, data_cycle=8)
+    print(json.dumps(res, indent=1))
+    assert res["last_loss"] < res["first_loss"]
+    print("OK — loss", f"{res['first_loss']:.3f} -> {res['last_loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

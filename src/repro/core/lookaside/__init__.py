@@ -1,0 +1,2 @@
+from repro.core.lookaside.control import ControlMsg, FIFO, StatusMsg  # noqa: F401
+from repro.core.lookaside.registry import LCKernel, LookasideBlock  # noqa: F401

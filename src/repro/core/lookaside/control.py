@@ -1,0 +1,55 @@
+"""Lookaside Compute control plane (paper §III-B.1).
+
+A control message is "similar to an argument list when invoking a C
+function": a workload id, the number of address arguments, and the
+addresses. Kernels read their operands from (device/host) memory through
+the engine — the LC block's AXI4 data interface — and signal completion
+through a status FIFO consumed either by polling or an interrupt handler.
+"""
+from __future__ import annotations
+
+import collections
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class ControlMsg:
+    """One kernel invocation request (the control-FIFO entry)."""
+    workload_id: int
+    args: tuple                 # addresses / sizes, kernel-defined
+    tag: int = 0                # host-chosen identifier for completion
+
+
+@dataclass(frozen=True)
+class StatusMsg:
+    """One completion (the status-FIFO entry)."""
+    workload_id: int
+    tag: int
+    ok: bool
+    result_addr: Optional[int] = None
+    detail: str = ""
+
+
+class FIFO:
+    """Bounded FIFO with not-empty signal (maps to the RTL FIFOs)."""
+
+    def __init__(self, depth: int = 64):
+        self.depth = depth
+        self._q: collections.deque = collections.deque()
+
+    def push(self, item) -> None:
+        if len(self._q) >= self.depth:
+            raise RuntimeError("FIFO full (backpressure)")
+        self._q.append(item)
+
+    def pop(self):
+        return self._q.popleft() if self._q else None
+
+    @property
+    def not_empty(self) -> bool:
+        return bool(self._q)
+
+    def __len__(self) -> int:
+        return len(self._q)

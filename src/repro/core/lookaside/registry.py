@@ -1,0 +1,78 @@
+"""Lookaside Compute block: kernel registry + execution loop (paper Fig 3).
+
+The block "has the capacity to accommodate multiple kernels"; each kernel
+is a JAX-callable with a control FIFO and a status FIFO. The host enqueues
+``ControlMsg``s (compute control API); when the control FIFO is not empty
+the kernel retrieves a message, accesses memory through the RDMA engine's
+buffer pool (its AXI4 data interface), executes, and pushes a StatusMsg.
+
+Completion is surfaced either by *polling* (``poll``) or an *interrupt*
+(callback registered per kernel) — both modes of §III-B.1.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.core.lookaside.control import ControlMsg, FIFO, StatusMsg
+
+
+class LCKernel:
+    """One registered lookaside kernel.
+
+    ``fn(engine, *args) -> Optional[int]`` reads/writes engine buffers and
+    returns an optional result address.
+    """
+
+    def __init__(self, workload_id: int, fn: Callable, name: str = ""):
+        self.workload_id = workload_id
+        self.fn = fn
+        self.name = name or fn.__name__
+        self.control_fifo = FIFO()
+        self.status_fifo = FIFO()
+        self.interrupt_handler: Optional[Callable[[StatusMsg], None]] = None
+
+
+class LookasideBlock:
+    """The LC block: multiple kernels sharing the engine's memory fabric."""
+
+    def __init__(self, engine):
+        self.engine = engine                 # shared RDMA engine (paper §I)
+        self.kernels: Dict[int, LCKernel] = {}
+
+    def register(self, workload_id: int, fn: Callable,
+                 name: str = "") -> LCKernel:
+        if workload_id in self.kernels:
+            raise KeyError(f"workload_id {workload_id} already registered")
+        k = LCKernel(workload_id, fn, name)
+        self.kernels[workload_id] = k
+        return k
+
+    def register_interrupt(self, workload_id: int,
+                           handler: Callable[[StatusMsg], None]) -> None:
+        self.kernels[workload_id].interrupt_handler = handler
+
+    # -- host-side compute-control API (libreconic Control API) -----------
+    def dispatch(self, msg: ControlMsg) -> None:
+        """Push a control message; the kernel executes when the FIFO is
+        serviced (here: immediately, single-threaded fabric model)."""
+        k = self.kernels[msg.workload_id]
+        k.control_fifo.push(msg)
+        self._service(k)
+
+    def _service(self, k: LCKernel) -> None:
+        while k.control_fifo.not_empty:
+            msg = k.control_fifo.pop()
+            try:
+                result_addr = k.fn(self.engine, *msg.args)
+                status = StatusMsg(k.workload_id, msg.tag, True, result_addr)
+            except Exception as e:  # kernel fault -> error status
+                status = StatusMsg(k.workload_id, msg.tag, False,
+                                   detail=str(e))
+            k.status_fifo.push(status)
+            if k.interrupt_handler is not None:      # interrupt mode
+                while k.status_fifo.not_empty:
+                    k.interrupt_handler(k.status_fifo.pop())
+
+    def poll(self, workload_id: int) -> Optional[StatusMsg]:
+        """Polling mode: host checks the status FIFO."""
+        return self.kernels[workload_id].status_fifo.pop()

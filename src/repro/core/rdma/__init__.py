@@ -1,0 +1,5 @@
+from repro.core.rdma.doorbell import DoorbellCoalescer, plan_buckets  # noqa: F401
+from repro.core.rdma.engine import RDMAEngine  # noqa: F401
+from repro.core.rdma.verbs import (  # noqa: F401
+    CQE, CQEStatus, MemoryRegion, Opcode, Placement, QueuePair, WQE,
+)

@@ -1,0 +1,77 @@
+"""Hardware constants + α–β cost models.
+
+Two hardware profiles:
+
+* ``PAPER_HW`` — the paper's testbed (Alveo U250, PCIe 3.0 x16, 100 GbE,
+  250 MHz fabric clock). Used by the discrete-event simulator to reproduce
+  Figs 8–12 and §VI-B.
+* ``TPU_V5E``  — the roofline target for the JAX framework (197 TFLOP/s
+  bf16, 819 GB/s HBM, ~50 GB/s/link ICI).
+
+All times in seconds, sizes in bytes, rates in units/second.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PaperHW:
+    """Constants from the paper's text (§VI) or fitted to its anchors."""
+    clock_hz: float = 250e6                  # ERNIC fabric clock
+    line_rate: float = 100e9 / 8             # 100 Gb/s -> bytes/s
+    pcie_peak: float = 15.76e9               # PCIe 3.0 x16 usable peak
+    pcie_eff: float = 0.825                  # measured 82.5% (=> ~13 GB/s)
+    # WQE fetch over PCIe slave bridge (§VI-C): 170 cycles first, 10 after
+    wqe_fetch_first: float = 170 * 4e-9      # 680 ns
+    wqe_fetch_next: float = 10 * 4e-9        # 40 ns
+    # host-memory access latency (Fig 8): 600..964 ns for <= 2048 B
+    host_access_base: float = 600e-9
+    host_access_2k: float = 964e-9
+    # MMIO register ops over PCIe AXI4-Lite ("inherently slow", §VI-C)
+    mmio_write: float = 200e-9               # posted doorbell write
+    mmio_read: float = 850e-9                # CQ poll read (non-posted RTT)
+    sw_poll_overhead: float = 2.3e-6         # driver poll loop + syscall path
+    wire_prop: float = 250e-9                # cable + MAC one-way
+    resp_process: float = 900e-9             # responder engine + dev-mem read
+    per_wqe_gap: float = 190e-9              # steady-state pipeline bubble
+
+    @property
+    def pcie_rate(self) -> float:
+        return self.pcie_peak * self.pcie_eff  # ~13 GB/s
+
+    def host_access_latency(self, nbytes: int) -> float:
+        """Fig 8: ~600 ns small, ~964 ns at 2 KB, then bandwidth-limited."""
+        if nbytes <= 64:
+            return self.host_access_base
+        if nbytes <= 2048:
+            f = (nbytes - 64) / (2048 - 64)
+            return self.host_access_base + f * (self.host_access_2k
+                                                - self.host_access_base)
+        return self.host_access_2k + (nbytes - 2048) / self.pcie_rate
+
+
+@dataclass(frozen=True)
+class TpuV5e:
+    peak_flops_bf16: float = 197e12
+    hbm_bw: float = 819e9
+    ici_bw_per_link: float = 50e9
+    hbm_bytes: float = 16e9
+    # collective dispatch overhead (the "doorbell" of the TPU world):
+    # per-collective launch + ring startup latency at pod scale.
+    alpha_dispatch: float = 12e-6
+    vmem_bytes: float = 128e6 / 2            # usable VMEM budget per core
+    mxu_dim: int = 128
+
+
+PAPER_HW = PaperHW()
+TPU_V5E = TpuV5e()
+
+
+def ring_all_reduce_bytes(nbytes: int, n: int) -> float:
+    """Per-device wire bytes for a ring all-reduce."""
+    return 2.0 * (n - 1) / n * nbytes
+
+
+def all_gather_bytes(nbytes_shard: int, n: int) -> float:
+    return (n - 1) * nbytes_shard

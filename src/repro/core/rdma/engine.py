@@ -1,0 +1,207 @@
+"""RDMAEngine — the shared offload engine (paper §III-A), software-defined.
+
+Faithfully reproduces the control flow of the paper's workflow (Fig 6):
+
+  1. host registers memory regions (MR, rkey) and creates QPs
+  2. host (or a compute block — the engine is SHARED, the paper's key
+     flexibility point) posts WQEs to an SQ
+  3. host rings the SQ doorbell — either per-WQE ("single-request") or once
+     per batch ("batch-requests", the paper's §VI-C optimization)
+  4. the engine validates rkeys/bounds, executes the covered WQEs as ONE
+     collective program on the ICI transport, and pushes CQEs
+  5. host polls the CQ (or registers an "interrupt" callback)
+
+QPs/buffers carry a ``host_mem`` / ``dev_mem`` placement tag mirroring
+``-l host_mem|dev_mem``; host_mem regions live in host RAM (numpy) and are
+staged over the "PCIe" path, dev_mem regions live in the device pool.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.rdma.transport import make_transport
+from repro.core.rdma.verbs import (
+    CQE, CQEStatus, MemoryRegion, Opcode, ONE_SIDED, Placement, QueuePair,
+    TWO_SIDED, WQE, next_qp_num, next_rkey,
+)
+
+
+class RDMAEngine:
+    """One engine instance manages a peer mesh + buffer pool + QPs/MRs."""
+
+    def __init__(self, n_peers: int = 2, pool_size: int = 1 << 16,
+                 dtype=np.float32, mesh=None):
+        self.n_peers = n_peers
+        self.pool_size = pool_size
+        self.transport = make_transport(n_peers, pool_size, dtype, mesh)
+        self.mesh = self.transport.mesh
+        self.mrs: Dict[int, MemoryRegion] = {}
+        self.qps: Dict[int, QueuePair] = {}
+        # host-RAM regions for Placement.HOST_MEM (the paper's host_mem QPs)
+        self.host_mem: Dict[int, np.ndarray] = {
+            p: np.zeros(pool_size, dtype) for p in range(n_peers)}
+        self.interrupt_handlers: Dict[int, Callable[[CQE], None]] = {}
+        self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0}
+
+    # ------------------------------------------------------------------ MRs
+    def register_mr(self, peer: int, base: int, length: int,
+                    placement: Placement = Placement.DEV_MEM) -> MemoryRegion:
+        assert 0 <= base and base + length <= self.pool_size, "MR out of pool"
+        mr = MemoryRegion(next_rkey(), peer, base, length, placement)
+        self.mrs[mr.rkey] = mr
+        return mr
+
+    def invalidate_mr(self, rkey: int) -> None:
+        mr = self.mrs.get(rkey)
+        if mr is not None:
+            self.mrs[rkey] = MemoryRegion(
+                mr.rkey, mr.peer, mr.base, mr.length, mr.placement,
+                valid=False)
+
+    # ------------------------------------------------------------------ QPs
+    def create_qp(self, local_peer: int, remote_peer: int,
+                  placement: Placement = Placement.DEV_MEM) -> QueuePair:
+        qp = QueuePair(next_qp_num(), local_peer, remote_peer, placement)
+        self.qps[qp.qp_num] = qp
+        return qp
+
+    # ---------------------------------------------------------------- verbs
+    def post_send(self, qp: QueuePair, wqe: WQE) -> None:
+        qp.post_send(wqe)
+
+    def post_recv(self, qp: QueuePair, wqe: WQE) -> None:
+        qp.post_recv(wqe)
+
+    def ring_sq_doorbell(self, qp: QueuePair,
+                         pidx: Optional[int] = None) -> None:
+        """Ring the SQ producer-index doorbell. ``pidx`` defaults to all
+        posted WQEs (batch-requests). Ringing after every single post is
+        the paper's single-request mode."""
+        qp.sq_doorbell = qp.sq_pidx if pidx is None else pidx
+        self._execute(qp)
+        self.stats["doorbells"] += 1
+
+    def poll_cq(self, qp: QueuePair, max_entries: int = 64) -> List[CQE]:
+        out, qp.cq = qp.cq[:max_entries], qp.cq[max_entries:]
+        return out
+
+    def register_interrupt(self, qp: QueuePair,
+                           handler: Callable[[CQE], None]) -> None:
+        """'Interrupt mode' of the status FIFO: invoke handler on CQE."""
+        self.interrupt_handlers[qp.qp_num] = handler
+
+    # ------------------------------------------------------------- engine
+    def _check_mr(self, rkey: int, peer: int, addr: int,
+                  length: int) -> Optional[CQEStatus]:
+        mr = self.mrs.get(rkey)
+        if mr is None or not mr.valid or mr.peer != peer:
+            return CQEStatus.REMOTE_ACCESS_ERROR
+        if not mr.contains(addr, length):
+            return CQEStatus.REMOTE_ACCESS_ERROR
+        return None
+
+    def _complete(self, qp: QueuePair, cqe: CQE) -> None:
+        qp.cq.append(cqe)
+        self.stats["cqes"] += 1
+        if cqe.status != CQEStatus.SUCCESS:
+            self.stats["errors"] += 1
+        h = self.interrupt_handlers.get(qp.qp_num)
+        if h is not None:
+            h(cqe)
+
+    def _execute(self, qp: QueuePair) -> None:
+        """Execute all doorbell-covered WQEs as one transport batch."""
+        wqes = qp.pending()
+        if not wqes:
+            return
+        plan: List[tuple] = []
+        completions: List[tuple] = []   # (qp, CQE) after transport runs
+        for wqe in wqes:
+            status = None
+            remote_cqe = None
+            if wqe.opcode in ONE_SIDED:
+                status = self._check_mr(wqe.rkey, qp.remote_peer,
+                                        wqe.remote_addr, wqe.length)
+                if status is None:
+                    if wqe.opcode is Opcode.READ:
+                        plan.append(("xfer", qp.remote_peer, qp.local_peer,
+                                     wqe.remote_addr, wqe.local_addr,
+                                     wqe.length))
+                    else:  # WRITE / WRITE_IMM
+                        plan.append(("xfer", qp.local_peer, qp.remote_peer,
+                                     wqe.local_addr, wqe.remote_addr,
+                                     wqe.length))
+                        if wqe.opcode is Opcode.WRITE_IMM:
+                            rqp = self._responder_qp(qp)
+                            if rqp is not None:
+                                remote_cqe = (rqp, CQE(
+                                    wr_id=wqe.wr_id, qp_num=rqp.qp_num,
+                                    opcode=wqe.opcode, byte_len=wqe.length,
+                                    imm=wqe.imm))
+            elif wqe.opcode in TWO_SIDED:
+                rqp = self._responder_qp(qp)
+                if rqp is None or not rqp.rq:
+                    status = CQEStatus.RNR
+                else:
+                    recv = rqp.rq.pop(0)
+                    n = min(wqe.length, recv.length)
+                    plan.append(("xfer", qp.local_peer, qp.remote_peer,
+                                 wqe.local_addr, recv.local_addr, n))
+                    if wqe.opcode is Opcode.SEND_INV and wqe.inv_rkey is not None:
+                        self.invalidate_mr(wqe.inv_rkey)
+                    remote_cqe = (rqp, CQE(
+                        wr_id=recv.wr_id, qp_num=rqp.qp_num,
+                        opcode=Opcode.RECV, byte_len=n,
+                        imm=wqe.imm if wqe.opcode is Opcode.SEND_IMM else None))
+            else:
+                status = CQEStatus.INVALID_OPCODE
+
+            completions.append((qp, CQE(
+                wr_id=wqe.wr_id, qp_num=qp.qp_num, opcode=wqe.opcode,
+                status=status or CQEStatus.SUCCESS,
+                byte_len=wqe.length if status is None else 0,
+                imm=wqe.imm), remote_cqe))
+
+        # ONE collective dispatch for the whole doorbell batch.
+        self.transport.execute_batch(plan)
+        self.stats["wqes"] += len(wqes)
+        qp.sq_cidx = qp.sq_doorbell
+
+        for q, cqe, remote in completions:
+            self._complete(q, cqe)
+            if remote is not None:
+                self._complete(*remote)
+
+    def _responder_qp(self, qp: QueuePair) -> Optional[QueuePair]:
+        """Find the paired QP on the remote peer (same connection)."""
+        for other in self.qps.values():
+            if (other.local_peer == qp.remote_peer
+                    and other.remote_peer == qp.local_peer
+                    and other.qp_num != qp.qp_num):
+                return other
+        return None
+
+    # ----------------------------------------------------- host data access
+    def write_buffer(self, peer: int, addr: int, data,
+                     placement: Placement = Placement.DEV_MEM) -> None:
+        if placement is Placement.HOST_MEM:
+            self.host_mem[peer][addr:addr + len(data)] = data
+        else:
+            self.transport.host_write(peer, addr, data)
+
+    def read_buffer(self, peer: int, addr: int, length: int,
+                    placement: Placement = Placement.DEV_MEM) -> np.ndarray:
+        if placement is Placement.HOST_MEM:
+            return self.host_mem[peer][addr:addr + length].copy()
+        return np.asarray(self.transport.host_read(peer, addr, length))
+
+    def sync_host_to_dev(self, peer: int, addr: int, length: int) -> None:
+        """Stage a host_mem region into dev_mem (the QDMA H2C path)."""
+        self.transport.host_write(
+            peer, addr, self.host_mem[peer][addr:addr + length])
+
+    @property
+    def pool(self):
+        return self.transport.pool

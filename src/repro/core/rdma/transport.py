@@ -1,0 +1,169 @@
+"""ICI transport: lowers RDMA verbs to JAX collective programs.
+
+This is the "wire" of the adapted RDMA engine. Registered buffers live as a
+single device array of shape ``(n_peers, pool_size)`` sharded over the
+``peers`` mesh axis — peer *i* owns row *i* (its HBM "device memory", the
+paper's dev_mem). A doorbell ring executes one jitted ``shard_map`` program
+for the whole WQE batch: each WQE becomes a dynamic-slice →
+``lax.ppermute`` → masked dynamic-update-slice sequence, so a batch of n
+WQEs is ONE dispatch (the paper's batched doorbell) instead of n.
+
+One-sided semantics are preserved: the responder's "CPU" (host python)
+never participates — only the collective program touches its buffer row.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.rdma.verbs import Opcode, WQE
+
+PEER_AXIS = "peers"
+
+
+def make_peer_mesh(n_peers: int) -> Mesh:
+    """A 1-D mesh of RDMA peers (for examples/tests; production embeds the
+    peer axis into the pod mesh)."""
+    return jax.make_mesh(
+        (n_peers,), (PEER_AXIS,),
+        axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def alloc_pool(mesh: Mesh, n_peers: int, pool_size: int,
+               dtype=jnp.float32) -> jax.Array:
+    """Allocate the per-peer registered buffer pool, sharded one row per
+    peer (each row is that peer's device memory)."""
+    sharding = NamedSharding(mesh, P(PEER_AXIS, None))
+    return jax.device_put(jnp.zeros((n_peers, pool_size), dtype), sharding)
+
+
+# ---------------------------------------------------------------------------
+# The collective program for one doorbell batch
+# ---------------------------------------------------------------------------
+
+def _xfer(local: jax.Array, src: int, dst: int, src_addr: int,
+          dst_addr: int, length: int, axis: str) -> jax.Array:
+    """Move ``length`` elements of row data from peer ``src`` @src_addr to
+    peer ``dst`` @dst_addr. ``local`` is this peer's (pool_size,) row."""
+    if src == dst:  # loopback
+        chunk = jax.lax.dynamic_slice(local, (src_addr,), (length,))
+    else:
+        chunk = jax.lax.dynamic_slice(local, (src_addr,), (length,))
+        chunk = jax.lax.ppermute(chunk, axis, [(src, dst)])
+    updated = jax.lax.dynamic_update_slice(local, chunk, (dst_addr,))
+    me = jax.lax.axis_index(axis)
+    return jnp.where(me == dst, updated, local)
+
+
+def _batch_program(wqe_plan: tuple, axis: str):
+    """Build the shard_map body executing a static WQE plan.
+
+    wqe_plan: tuple of (kind, src, dst, src_addr, dst_addr, length) where
+    kind is 'xfer' (all verbs reduce to a directed copy at transport level).
+    """
+    def body(pool_row: jax.Array) -> jax.Array:
+        local = pool_row[0]  # (pool_size,) — our row
+        for (_, src, dst, src_addr, dst_addr, length) in wqe_plan:
+            local = _xfer(local, src, dst, src_addr, dst_addr, length, axis)
+        return local[None]
+    return body
+
+
+@functools.partial(jax.jit, static_argnames=("wqe_plan", "axis"))
+def _run_plan(pool: jax.Array, wqe_plan: tuple, axis: str) -> jax.Array:
+    mesh = jax.sharding.get_abstract_mesh()
+    return jax.shard_map(
+        _batch_program(wqe_plan, axis),
+        mesh=mesh, in_specs=P(axis, None), out_specs=P(axis, None),
+    )(pool)
+
+
+class LocalTransport:
+    """Single-device emulation of the peer fabric (semantically identical:
+    row i of the pool is peer i's memory). Used when the process has fewer
+    devices than peers — tests/examples on 1-CPU containers. The collective
+    path (``ICITransport``) is exercised under
+    ``--xla_force_host_platform_device_count`` in subprocess tests and the
+    dry-run."""
+
+    def __init__(self, pool: jax.Array):
+        self.pool = pool
+        self.mesh = None
+        self.dispatch_count = 0
+        self.wqe_count = 0
+
+    def execute_batch(self, plan: Sequence[tuple]) -> None:
+        if not plan:
+            return
+        self.pool = _run_plan_local(self.pool, tuple(plan))
+        self.dispatch_count += 1
+        self.wqe_count += len(plan)
+
+    def host_read(self, peer: int, addr: int, length: int):
+        return jax.device_get(self.pool[peer, addr:addr + length])
+
+    def host_write(self, peer: int, addr: int, data) -> None:
+        data = jnp.asarray(data, self.pool.dtype)
+        self.pool = _host_write(self.pool, data, peer, addr)
+
+
+@functools.partial(jax.jit, static_argnames=("wqe_plan",))
+def _run_plan_local(pool: jax.Array, wqe_plan: tuple) -> jax.Array:
+    for (_, src, dst, src_addr, dst_addr, length) in wqe_plan:
+        chunk = jax.lax.dynamic_slice(pool, (src, src_addr), (1, length))
+        pool = jax.lax.dynamic_update_slice(pool, chunk, (dst, dst_addr))
+    return pool
+
+
+def make_transport(n_peers: int, pool_size: int, dtype=jnp.float32,
+                   mesh: Mesh = None):
+    """Pick ICI (real peer mesh) when enough devices exist, else local."""
+    if mesh is None and len(jax.devices()) < n_peers:
+        pool = jnp.zeros((n_peers, pool_size), dtype)
+        return LocalTransport(pool)
+    mesh = mesh if mesh is not None else make_peer_mesh(n_peers)
+    pool = alloc_pool(mesh, n_peers, pool_size, dtype)
+    return ICITransport(mesh, pool)
+
+
+class ICITransport:
+    """Executes doorbell batches of WQEs against a peer-sharded pool.
+
+    The whole batch lowers to ONE program — the jit dispatch is the
+    "doorbell MMIO write" and per-WQE ``ppermute`` latencies pipeline inside
+    the program, mirroring the paper's batched WQE fetch (§VI-C).
+    """
+
+    def __init__(self, mesh: Mesh, pool: jax.Array, axis: str = PEER_AXIS):
+        self.mesh = mesh
+        self.pool = pool
+        self.axis = axis
+        self.dispatch_count = 0   # doorbells rung (jit dispatches)
+        self.wqe_count = 0        # WQEs executed
+
+    def execute_batch(self, plan: Sequence[tuple]) -> None:
+        """plan: iterable of (kind, src, dst, src_addr, dst_addr, length)."""
+        if not plan:
+            return
+        with jax.set_mesh(self.mesh):
+            self.pool = _run_plan(self.pool, tuple(plan), self.axis)
+        self.dispatch_count += 1
+        self.wqe_count += len(plan)
+
+    # -- host access ("QDMA"): the paper's host<->dev_mem DMA path ---------
+    def host_read(self, peer: int, addr: int, length: int):
+        return jax.device_get(self.pool[peer, addr:addr + length])
+
+    def host_write(self, peer: int, addr: int, data) -> None:
+        data = jnp.asarray(data, self.pool.dtype)
+        with jax.set_mesh(self.mesh):
+            self.pool = _host_write(self.pool, data, peer, addr)
+
+
+@functools.partial(jax.jit, static_argnames=("peer", "addr"))
+def _host_write(pool, data, peer: int, addr: int):
+    return jax.lax.dynamic_update_slice(pool, data[None], (peer, addr))

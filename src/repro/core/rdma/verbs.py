@@ -1,0 +1,128 @@
+"""RDMA verb/queue data structures (RecoNIC / RoCEv2 semantics).
+
+These mirror the paper's §III-A / §IV-B terminology: work queue elements
+(WQE), send queues (SQ), receive queues (RQ), completion queues (CQ) and
+queue pairs (QP = SQ + RQ + CQ). The transport is the TPU ICI fabric
+instead of 100GbE (see DESIGN.md §2) but the verb semantics are kept:
+
+  READ / WRITE          one-sided, responder CPU not involved
+  SEND / RECV           two-sided, RECV must be pre-posted on responder RQ
+  WRITE_IMM / SEND_IMM  carry 32-bit immediate delivered in responder CQE
+  SEND_INV              invalidates a remote rkey on completion
+
+Memory regions (MR) carry rkeys and a placement tag (``host_mem`` /
+``dev_mem``) exactly like the paper's ``-l host_mem|dev_mem`` option.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import Optional
+
+
+class Opcode(enum.Enum):
+    READ = "read"
+    WRITE = "write"
+    SEND = "send"
+    RECV = "recv"
+    WRITE_IMM = "write_imm"
+    SEND_IMM = "send_imm"
+    SEND_INV = "send_inv"
+
+
+ONE_SIDED = {Opcode.READ, Opcode.WRITE, Opcode.WRITE_IMM}
+TWO_SIDED = {Opcode.SEND, Opcode.SEND_IMM, Opcode.SEND_INV}
+
+
+class Placement(enum.Enum):
+    HOST_MEM = "host_mem"
+    DEV_MEM = "dev_mem"
+
+
+class CQEStatus(enum.Enum):
+    SUCCESS = "success"
+    REMOTE_ACCESS_ERROR = "remote_access_error"   # bad rkey / bounds
+    INVALID_OPCODE = "invalid_opcode"
+    RNR = "receiver_not_ready"                    # SEND with empty RQ
+
+
+@dataclass(frozen=True)
+class MemoryRegion:
+    """A registered buffer region. ``rkey`` gates remote access — the
+    address-MSB routing of the paper becomes an explicit region handle."""
+    rkey: int
+    peer: int                 # owning peer (mesh position on the peer axis)
+    base: int                 # offset into the peer's buffer pool
+    length: int
+    placement: Placement = Placement.DEV_MEM
+    valid: bool = True
+
+    def contains(self, addr: int, length: int) -> bool:
+        return self.base <= addr and addr + length <= self.base + self.length
+
+
+@dataclass(frozen=True)
+class WQE:
+    """Work queue element — the paper's 'argument list' for one transfer."""
+    opcode: Opcode
+    qp_num: int
+    wr_id: int
+    local_addr: int = 0
+    remote_addr: int = 0
+    length: int = 0
+    rkey: int = -1            # remote MR key (one-sided ops)
+    imm: Optional[int] = None
+    inv_rkey: Optional[int] = None
+
+
+@dataclass(frozen=True)
+class CQE:
+    """Completion queue entry."""
+    wr_id: int
+    qp_num: int
+    opcode: Opcode
+    status: CQEStatus = CQEStatus.SUCCESS
+    byte_len: int = 0
+    imm: Optional[int] = None
+
+
+@dataclass
+class QueuePair:
+    """QP: SQ/RQ descriptor rings + a CQ. ``sq_pidx``/``sq_doorbell`` mimic
+    the producer-index doorbell of the paper — WQEs posted beyond the last
+    rung doorbell are not visible to the engine until ``ring_sq_doorbell``.
+    """
+    qp_num: int
+    local_peer: int
+    remote_peer: int
+    placement: Placement = Placement.DEV_MEM
+    sq: list = field(default_factory=list)       # list[WQE]
+    rq: list = field(default_factory=list)       # list[WQE] (RECVs)
+    cq: list = field(default_factory=list)       # list[CQE]
+    sq_pidx: int = 0          # producer index (posted)
+    sq_doorbell: int = 0      # last doorbell value (visible to engine)
+    sq_cidx: int = 0          # consumer index (executed)
+
+    def post_send(self, wqe: WQE) -> None:
+        self.sq.append(wqe)
+        self.sq_pidx += 1
+
+    def post_recv(self, wqe: WQE) -> None:
+        self.rq.append(wqe)
+
+    def pending(self) -> list:
+        """WQEs covered by the doorbell but not yet executed."""
+        return self.sq[self.sq_cidx:self.sq_doorbell]
+
+
+_qp_counter = itertools.count(1)
+_rkey_counter = itertools.count(0x1000)
+
+
+def next_qp_num() -> int:
+    return next(_qp_counter)
+
+
+def next_rkey() -> int:
+    return next(_rkey_counter)

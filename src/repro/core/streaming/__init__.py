@@ -1,0 +1,8 @@
+from repro.core.streaming.classifier import (  # noqa: F401
+    TrafficClass, TrafficRouter, TransferDesc, classify_headers,
+    make_roce_header,
+)
+from repro.core.streaming.compress import (  # noqa: F401
+    compress_bucket, compressed_all_reduce, decompress_bucket,
+    init_error_state,
+)

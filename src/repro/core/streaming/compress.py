@@ -1,0 +1,66 @@
+"""In-flight gradient compression with error feedback (Streaming Compute).
+
+The SC block's training-system role: compress gradient buckets to int8 as
+they stream into the cross-pod all-reduce, keeping a local fp32 residual
+(error feedback) so compression noise does not bias convergence.
+
+All functions are pure (state threaded explicitly) so they jit/pjit
+cleanly inside the train step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+
+def init_error_state(grads) -> dict:
+    """Residual pytree, same structure/shape as grads, fp32 zeros."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_bucket(flat: jax.Array, residual: jax.Array, *,
+                    chunk: int = 1024
+                    ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Quantize (flat + residual) to int8 chunks; new residual = error.
+
+    Returns (q_int8 (n,chunk), scales (n,1), new_residual).
+    """
+    target = flat.astype(jnp.float32) + residual
+    q, s, _ = kops.compress(target, chunk=chunk)
+    back = kops.decompress(q, s, target.shape, dtype=jnp.float32)
+    return q, s, target - back
+
+
+def decompress_bucket(q: jax.Array, scales: jax.Array, shape,
+                      dtype=jnp.float32) -> jax.Array:
+    return kops.decompress(q, scales, shape, dtype=dtype)
+
+
+def compressed_all_reduce(flat: jax.Array, residual: jax.Array,
+                          axis: str, *, chunk: int = 1024
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """Compress -> psum(int8 as int32) -> dequant mean. Inside shard_map.
+
+    int8 payloads psum as int32 (no overflow below ~2^23 peers); scales are
+    psum'd too so the dequant uses the mean scale — a standard 1-bit/8-bit
+    SGD style estimator with error feedback carrying the bias.
+    """
+    n = jax.lax.psum(1, axis)
+    q, s, new_residual = compress_bucket(flat, residual, chunk=chunk)
+    q_sum = jax.lax.psum(q.astype(jnp.int32), axis)
+    s_mean = jax.lax.psum(s, axis) / n
+    # mean over peers: (sum_i q_i * s_i) ~= s_mean * sum_i q_i  / n
+    est = (q_sum.astype(jnp.float32) * s_mean / n)
+    out = est.reshape(-1)[: flat.shape[0]].astype(flat.dtype)
+    return out, new_residual
+
+
+def compression_ratio(nbytes_fp32: int, chunk: int = 1024) -> float:
+    """Wire-bytes ratio: int8 payload + fp32 scale per chunk vs fp32."""
+    n_chunks = -(-nbytes_fp32 // 4 // chunk)
+    compressed = nbytes_fp32 // 4 + n_chunks * 4
+    return compressed / nbytes_fp32

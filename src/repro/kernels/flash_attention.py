@@ -1,0 +1,120 @@
+"""Blockwise (flash) attention — Lookaside Compute hot-spot kernel.
+
+Online-softmax attention tiled for VMEM: grid (batch*q_heads, Sq/bq,
+Skv/bk) with the KV sweep innermost (sequential on TPU), carrying the
+running max / denominator / fp32 accumulator in VMEM scratch. Supports
+causal masking (block-level early-out + intra-block iota mask), GQA
+(kv head = q head // group) and sliding windows.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 kv_steps: int, block_q: int, block_k: int, scale: float,
+                 causal: bool, window: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+
+    def _compute():
+        q = q_ref[0].astype(jnp.float32) * scale      # (bq, d)
+        k = k_ref[0].astype(jnp.float32)              # (bk, d)
+        v = v_ref[0].astype(jnp.float32)              # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (bq, bk)
+        mask = jnp.ones_like(s, dtype=jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (bq, 1)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                         # (bq, bk)
+        alpha = jnp.exp(m_prev - m_new)                # (bq, 1)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    if causal or window > 0:
+        # block-level skip: no key in this block can be visible
+        first_q = qi * block_q
+        last_q = first_q + block_q - 1
+        first_k = ki * block_k
+        last_k = first_k + block_k - 1
+        visible = jnp.array(True)
+        if causal:
+            visible &= last_q >= first_k
+        if window > 0:
+            visible &= (first_q - last_k) < window
+        pl.when(visible)(_compute)
+    else:
+        _compute()
+
+    @pl.when(ki == kv_steps - 1)
+    def _flush():
+        # rows with no visible keys keep l == 0; emit zeros there.
+        l = l_ref[...]
+        safe = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_ref[...] / safe).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    scale: float = None, interpret: bool = False
+                    ) -> jax.Array:
+    """q: (BH, Sq, d), k/v: (BH, Skv, d) -> (BH, Sq, d).
+
+    BH = batch*heads flattened (GQA handled by ``ops.attention`` which
+    repeats KV heads via the index map, not materialization).
+    """
+    bh, sq, d = q.shape
+    bh2, skv, d2 = k.shape
+    assert bh == bh2 and d == d2
+    assert sq % block_q == 0 and skv % block_k == 0, (sq, skv, block_q, block_k)
+    scale = scale if scale is not None else d ** -0.5
+    kv_steps = skv // block_k
+
+    return pl.pallas_call(
+        functools.partial(
+            _attn_kernel, kv_steps=kv_steps, block_q=block_q,
+            block_k=block_k, scale=scale, causal=causal, window=window),
+        grid=(bh, sq // block_q, kv_steps),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

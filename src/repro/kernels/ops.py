@@ -1,0 +1,122 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These handle arbitrary shapes (padding to block multiples), GQA head
+mapping, pytree compression, and TPU/CPU dispatch: on non-TPU backends the
+kernels run in ``interpret=True`` mode (Python-level execution for
+correctness validation); on TPU they compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import packet_parser as _pp
+from repro.kernels import quantize_stream as _qs
+from repro.kernels import systolic_mm as _mm
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int) -> jax.Array:
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n", "block_k"))
+def matmul(x: jax.Array, y: jax.Array, *, block_m: int = 128,
+           block_n: int = 128, block_k: int = 128) -> jax.Array:
+    """General (M,K)x(K,N) matmul via the systolic kernel, padding to
+    MXU-aligned blocks."""
+    m, k = x.shape
+    _, n = y.shape
+    xp = _pad_to(_pad_to(x, 0, block_m), 1, block_k)
+    yp = _pad_to(_pad_to(y, 0, block_k), 1, block_n)
+    out = _mm.systolic_mm(xp, yp, block_m=block_m, block_n=block_n,
+                          block_k=block_k, interpret=_interpret())
+    return out[:m, :n]
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_k"))
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, window: int = 0,
+              block_q: int = 128, block_k: int = 128) -> jax.Array:
+    """q: (B, Sq, Hq, d), k/v: (B, Skv, Hkv, d) -> (B, Sq, Hq, d).
+
+    GQA: q heads grouped onto kv heads (Hq % Hkv == 0).
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    scale = d ** -0.5
+
+    bq = min(block_q, _next_mult(sq))
+    bk = min(block_k, _next_mult(skv))
+    qp = _pad_to(q, 1, bq)
+    kp = _pad_to(k, 1, bk)
+    vp = _pad_to(v, 1, bk)
+    sqp, skvp = qp.shape[1], kp.shape[1]
+
+    # (B, S, H, d) -> (B*H, S, d); repeat kv heads for GQA
+    qf = qp.transpose(0, 2, 1, 3).reshape(b * hq, sqp, d)
+    kf = jnp.repeat(kp.transpose(0, 2, 1, 3), group, axis=1
+                    ).reshape(b * hq, skvp, d)
+    vf = jnp.repeat(vp.transpose(0, 2, 1, 3), group, axis=1
+                    ).reshape(b * hq, skvp, d)
+
+    out = _fa.flash_attention(
+        qf, kf, vf, causal=causal, window=window, block_q=bq, block_k=bk,
+        scale=scale, interpret=_interpret())
+    out = out.reshape(b, hq, sqp, d).transpose(0, 2, 1, 3)
+    return out[:, :sq]
+
+
+def _next_mult(n: int, base: int = 128) -> int:
+    """Largest power-of-two block <= base that divides padded n nicely."""
+    for cand in (128, 64, 32, 16, 8):
+        if cand <= base and n % cand == 0:
+            return cand
+    return base
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def compress(x: jax.Array, *, chunk: int = 1024
+             ) -> Tuple[jax.Array, jax.Array, int]:
+    """Flatten + pad + chunked int8 quantize. Returns (q, scales, n)."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    flat = _pad_to(flat, 0, chunk).reshape(-1, chunk)
+    q, s = _qs.quantize_stream(flat, chunk=chunk, interpret=_interpret())
+    return q, s, n
+
+
+@functools.partial(jax.jit, static_argnames=("shape", "dtype"))
+def decompress(q: jax.Array, scales: jax.Array, shape, dtype=jnp.float32
+               ) -> jax.Array:
+    x = _qs.dequantize_stream(q, scales, out_dtype=dtype,
+                              interpret=_interpret())
+    size = 1
+    for s in shape:
+        size *= s
+    return x.reshape(-1)[:size].reshape(shape)
+
+
+@jax.jit
+def classify_packets(pkts: jax.Array) -> jax.Array:
+    """(n, 64) uint8 headers -> (n, 4) [is_rdma, opcode, dest_qp, class]."""
+    n = pkts.shape[0]
+    bp = _next_mult(n, 256)
+    pp = _pad_to(pkts, 0, bp)
+    return _pp.parse_packets(pp, block_p=bp, interpret=_interpret())[:n]

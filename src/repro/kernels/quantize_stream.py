@@ -1,0 +1,69 @@
+"""Streaming int8 quantization — the Streaming Compute block's in-flight
+gradient compression kernel (DESIGN.md §2: SC = transform bytes in flight).
+
+Data is processed in packet-sized chunks, exactly how the SC block sees
+AXI4-Stream beats: grid over chunks, each chunk quantized independently
+with its own fp32 scale (max-abs / 127). The chunked layout means a
+gradient bucket can be compressed as it streams into a collective without
+a global reduction over the tensor.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                 # (1, chunk)
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0.0, 1.0, amax / 127.0)  # (1, 1)
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, x_ref, *, out_dtype):
+    x_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]).astype(out_dtype)
+
+
+def quantize_stream(x: jax.Array, *, chunk: int = 1024,
+                    interpret: bool = False):
+    """x: (n_chunks * chunk,) flat -> (int8 values (n,chunk), scales (n,1)).
+
+    ``ops.compress`` handles padding/reshape of arbitrary pytrees.
+    """
+    assert x.ndim == 2 and x.shape[1] == chunk, x.shape
+    n = x.shape[0]
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, chunk), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, chunk), jnp.int8),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_stream(q: jax.Array, scales: jax.Array, *,
+                      out_dtype=jnp.float32, interpret: bool = False):
+    n, chunk = q.shape
+    return pl.pallas_call(
+        functools.partial(_dequant_kernel, out_dtype=out_dtype),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, chunk), out_dtype),
+        interpret=interpret,
+    )(q, scales)

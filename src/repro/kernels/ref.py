@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each ``ref_*`` mirrors its kernel's semantics exactly — tests sweep shapes
+and dtypes asserting allclose between kernel (interpret=True) and oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.packet_parser import _parse_block
+
+
+def ref_matmul(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32)
+                   ).astype(out_dtype)
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0,
+                  scale: float = None) -> jax.Array:
+    """q: (BH, Sq, d), k/v: (BH, Skv, d)."""
+    _, sq, d = q.shape
+    _, skv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    # rows with zero visible keys -> zeros (matches kernel's safe divide)
+    any_visible = mask.any(axis=-1)
+    out = jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32))
+    out = jnp.where(any_visible[None, :, None], out, 0.0)
+    return out.astype(q.dtype)
+
+
+def ref_quantize(x: jax.Array):
+    """x: (n, chunk) -> (int8 (n, chunk), scales (n, 1))."""
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
+    scale = jnp.where(amax == 0.0, 1.0, amax / 127.0)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def ref_dequantize(q: jax.Array, scales: jax.Array, out_dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scales).astype(out_dtype)
+
+
+def ref_parse_packets(pkts: jax.Array) -> jax.Array:
+    return _parse_block(pkts.astype(jnp.int32))

@@ -1,0 +1,96 @@
+"""SSD (Mamba-2) chunked scan — Lookaside Compute kernel for the SSM
+architectures (mamba2-370m, hymba-1.5b).
+
+Grid: (batch, heads, n_chunks) with the chunk sweep innermost
+(sequential on TPU), carrying the (head_dim, d_state) inter-chunk state
+in fp32 VMEM scratch — the chunk-local quadratic form runs on the MXU
+while the recurrence never leaves VMEM. n_groups == 1 (B/C shared across
+heads), the configuration of both assigned SSM archs.
+
+Oracle: ``repro.models.ssm._ssd_chunked`` (the pure-jnp training path).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *,
+                nc: int, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)        # (L, hd)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)      # (L,)
+    a = a_ref[0]                                   # scalar (negative)
+    bm = b_ref[0, 0].astype(jnp.float32)           # (L, n)
+    cm = c_ref[0, 0].astype(jnp.float32)           # (L, n)
+
+    da = dt * a                                    # (L,)
+    cum = jnp.cumsum(da)                           # (L,)
+    seg_end = cum[-1]
+
+    # intra-chunk quadratic form: w[i,j] = exp(cum_i - cum_j) dt_j (C_i.B_j)
+    rel = cum[:, None] - cum[None, :]              # (L, L)
+    tri = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    rel = jnp.where(tri, rel, -1e30)
+    cb = jnp.dot(cm, bm.T, preferred_element_type=jnp.float32)
+    w = cb * jnp.exp(rel) * dt[None, :]
+    y = jnp.dot(w, x, preferred_element_type=jnp.float32)   # (L, hd)
+
+    # inter-chunk: y += exp(cum_i) * C_i . S_prev
+    s_prev = state_ref[...]                        # (hd, n)
+    y += jnp.exp(cum)[:, None] * jnp.dot(
+        cm, s_prev.T, preferred_element_type=jnp.float32)
+
+    # state update: S = exp(seg_end) S_prev + sum_j exp(seg_end-cum_j) dt_j x_j B_j^T
+    wst = jnp.exp(seg_end - cum) * dt              # (L,)
+    new_state = (jnp.exp(seg_end) * s_prev
+                 + jnp.dot((x * wst[:, None]).T, bm,
+                           preferred_element_type=jnp.float32))
+    state_ref[...] = new_state
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(xh: jax.Array, dt: jax.Array, a: jax.Array, bm: jax.Array,
+             cm: jax.Array, *, chunk: int, interpret: bool = False):
+    """xh: (B,S,nh,hd), dt: (B,S,nh), a: (nh,), bm/cm: (B,S,1,n) (g=1).
+
+    Returns y (B,S,nh,hd). S % chunk == 0.
+    """
+    b, s, nh, hd = xh.shape
+    n = bm.shape[-1]
+    assert s % chunk == 0 and bm.shape[2] == 1, (s, chunk, bm.shape)
+    nc = s // chunk
+
+    # chunked, head-major layouts
+    xc = xh.reshape(b, nc, chunk, nh, hd).transpose(0, 3, 1, 2, 4)
+    dtc = dt.reshape(b, nc, chunk, nh).transpose(0, 3, 1, 2)
+    bc = bm.reshape(b, nc, chunk, n)
+    cc = cm.reshape(b, nc, chunk, n)
+
+    y = pl.pallas_call(
+        functools.partial(_ssd_kernel, nc=nc, chunk=chunk),
+        grid=(b, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, chunk, hd),
+                         lambda i, h, c: (i, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, chunk), lambda i, h, c: (i, h, c, 0)),
+            pl.BlockSpec((1,), lambda i, h, c: (h,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, h, c: (i, c, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda i, h, c: (i, c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, chunk, hd),
+                               lambda i, h, c: (i, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nh, nc, chunk, hd), xh.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
+        interpret=interpret,
+    )(xc, dtc, a.astype(jnp.float32), bc, cc)
+    return y.transpose(0, 2, 3, 1, 4).reshape(b, s, nh, hd)

@@ -1,0 +1,61 @@
+"""Systolic-array matrix multiply — the paper's Lookaside Compute example
+(§IV-C), adapted from an HLS systolic array to the TPU MXU.
+
+The TPU's MXU *is* a 128x128 systolic array, so the paper's kernel maps
+onto hardware directly: we tile (M, K) x (K, N) into MXU-aligned VMEM
+blocks and accumulate partial products in an fp32 VMEM scratch across the
+K grid dimension (sequential innermost on TPU), exactly the dataflow the
+HLS version emulates in fabric.
+
+Grid: (M/bm, N/bn, K/bk); K innermost so the accumulator lives across the
+K sweep for each (i, j) output tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, y_ref, o_ref, acc_ref, *, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], y_ref[...], preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def systolic_mm(x: jax.Array, y: jax.Array, *,
+                block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                out_dtype=None, interpret: bool = False) -> jax.Array:
+    """x: (M, K), y: (K, N) -> (M, N). Dims must be multiples of the block
+    sizes (``ops.matmul`` pads arbitrary shapes)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert m % block_m == 0 and n % block_n == 0 and k % block_k == 0, (
+        f"shape ({m},{k})x({k},{n}) not aligned to blocks "
+        f"({block_m},{block_n},{block_k})")
+    out_dtype = out_dtype or x.dtype
+    k_steps = k // block_k
+
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, k_steps=k_steps),
+        grid=(m // block_m, n // block_n, k_steps),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,170 @@
+"""ShapeDtypeStruct input specs + shardings for every dry-run cell.
+
+``input_specs(model, shape)`` returns weak-type-correct, shardable
+stand-ins for every model input — no device allocation (the paper's
+"hardware simulation without hardware" posture applied to lowering).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models.transformer import init_caches
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_partition(mesh: Mesh, global_batch: int) -> Tuple:
+    """Batch-dim sharding: over (pod,data) when divisible, else None."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if axes and global_batch % size == 0:
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict:
+    b, s = shape.global_batch, shape.seq_len
+    specs = {"tokens": sds((b, s), jnp.int32),
+             "labels": sds((b, s), jnp.int32)}
+    if cfg.mrope:
+        specs["mrope_positions"] = sds((3, b, s), jnp.int32)
+        specs["patch_embeds"] = sds(
+            (b, s // cfg.vision_patches_ratio, cfg.d_model), jnp.bfloat16)
+    if cfg.enc_dec:
+        specs["enc_embeds"] = sds(
+            (b, s // cfg.encoder_seq_ratio, cfg.d_model), jnp.bfloat16)
+    return specs
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      kind: str) -> Dict:
+    """kind: 'prefill' (tokens = full prompt) or 'decode' (one token,
+    caches at seq_len depth)."""
+    b, s = shape.global_batch, shape.seq_len
+    if kind == "prefill":
+        specs = {"tokens": sds((b, s), jnp.int32)}
+        toks_s = s
+    else:
+        specs = {"tokens": sds((b, 1), jnp.int32),
+                 "pos": sds((), jnp.int32)}
+        toks_s = 1
+    if cfg.mrope:
+        specs["mrope_positions"] = sds((3, b, toks_s), jnp.int32)
+        if kind == "prefill":
+            specs["patch_embeds"] = sds(
+                (b, s // cfg.vision_patches_ratio, cfg.d_model),
+                jnp.bfloat16)
+    if cfg.enc_dec:
+        specs["enc_embeds"] = sds(
+            (b, s // cfg.encoder_seq_ratio, cfg.d_model), jnp.bfloat16)
+    specs["caches"] = jax.eval_shape(
+        lambda: init_caches(cfg, b, s, jnp.bfloat16))
+    return specs
+
+
+def batch_spec_tree(cfg: ModelConfig, specs: Dict, mesh: Mesh,
+                    global_batch: int) -> Dict:
+    """PartitionSpecs for the input dict (excluding caches)."""
+    bp = batch_partition(mesh, global_batch)
+    out = {}
+    for k, v in specs.items():
+        if k == "caches":
+            out[k] = cache_partition_specs(v, mesh, global_batch)
+        elif k == "pos":
+            out[k] = P()
+        elif k == "mrope_positions":
+            out[k] = P(None, bp, None)
+        elif k in ("patch_embeds", "enc_embeds"):
+            out[k] = P(bp, None, None)
+        else:                          # tokens / labels / positions (B, S)
+            out[k] = P(bp, None)
+    return out
+
+
+def cache_partition_specs(caches, mesh: Mesh, global_batch: int):
+    """Cache shardings. Batch over dp when divisible; otherwise the cache
+    SEQUENCE dim is dp-sharded (long_500k, B=1). Feature dims over 'model'
+    where the per-arch dims divide (head_dim / latent / channels)."""
+    bp = batch_partition(mesh, global_batch)
+    seq_p = None if bp is not None else tuple(
+        a for a in ("pod", "data") if a in mesh.axis_names) or None
+    tp = "model" if "model" in mesh.axis_names else None
+    tp_size = mesh.shape[tp] if tp else 1
+
+    # base (unstacked) ranks per leaf kind; stacked leaves gain a layer dim
+    _BASE_RANK = {"k": 4, "v": 4, "c_kv": 3, "k_rope": 3, "conv": 3,
+                  "ssm": 4}
+
+    def leaf_spec(keys, x):
+        name = keys[-1]
+        dims = x.shape
+        if x.ndim == 0 or name == "pos":
+            return P()
+        base = _BASE_RANK.get(name)
+        if base is None:
+            return P(*([None] * x.ndim))
+        off = x.ndim - base            # 1 when scan-stacked, else 0
+
+        def tp_if(axis_idx):
+            i = axis_idx + off
+            return tp if tp and dims[i] % tp_size == 0 else None
+
+        if name in ("k", "v"):         # (B, S, Hkv, hd)
+            body = (bp, seq_p, None, tp_if(3))
+        elif name in ("c_kv", "k_rope"):  # (B, S, r)
+            body = (bp, seq_p, tp_if(2))
+        elif name == "conv":           # (B, K-1, C)
+            body = (bp, None, tp_if(2))
+        else:                          # ssm: (B, nh, hd, N)
+            body = (bp, None, tp_if(2), None)
+        return P(*(((None,) * off) + body))
+
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    from repro.models.sharding import _set
+    out = {}
+    for kp, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        _set(out, keys, leaf_spec(keys, leaf))
+    return out
+
+
+def sanitize_specs(specs, shapes, mesh: Mesh):
+    """Drop spec entries whose dim is not divisible by the mesh-axis
+    extent (ragged fused projections, odd head counts, ...)."""
+    sizes = dict(zip(mesh.axis_names, mesh.shape.values())) \
+        if hasattr(mesh.shape, "values") else dict(mesh.shape)
+
+    def fix(spec, shape_leaf):
+        dims = shape_leaf.shape
+        clean = []
+        for i, entry in enumerate(spec):
+            if entry is None:
+                clean.append(None)
+                continue
+            names = entry if isinstance(entry, tuple) else (entry,)
+            extent = 1
+            for a in names:
+                extent *= sizes.get(a, 1)
+            dim = dims[i] if i < len(dims) else 1
+            clean.append(entry if dim % extent == 0 else None)
+        return P(*clean)
+
+    return jax.tree.map(
+        lambda s, sh: fix(s, sh), specs, shapes,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def named(tree_specs, mesh: Mesh):
+    """PartitionSpec pytree -> NamedSharding pytree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+from repro.models.transformer import (  # noqa: F401
+    cross_entropy, forward, init_caches, init_params, loss_fn,
+)
+from repro.models.sharding import param_specs  # noqa: F401

@@ -1,0 +1,425 @@
+"""Shared model layers (pure JAX, explicit param pytrees).
+
+Covers every structural feature of the assigned archs: RMSNorm, RoPE and
+M-RoPE (3-D multimodal rope), GQA attention with optional qk-norm / QKV
+bias / sliding window, SwiGLU MLP, and MLA (multi-head latent attention).
+Attention can route through the Pallas lookaside kernel (``use_pallas``)
+or the XLA einsum path (default for training/dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import (attention_seq_mode, batch_axes, shard,
+                                   shard_activation_tp, shard_attention_out,
+                                   shard_attention_qkv)
+
+NEG_INF = -1e30
+
+# Attention lowering strategy (perf knob, see EXPERIMENTS.md §Perf):
+#   naive     — paper-faithful baseline: full (B,H,Sq,Skv) score tensor
+#   blockwise — online-softmax scan over KV chunks (flash-style): the
+#               lowered HLO never materializes S^2 scores, and QK/AV dots
+#               run on bf16 inputs with fp32 accumulation (MXU-native)
+_ATTN_IMPL = "naive"
+_ATTN_CHUNK = 2048
+
+
+def set_attention_impl(impl: str, chunk: int = 2048) -> None:
+    global _ATTN_IMPL, _ATTN_CHUNK
+    assert impl in ("naive", "blockwise"), impl
+    _ATTN_IMPL = impl
+    _ATTN_CHUNK = chunk
+
+
+def get_attention_impl() -> str:
+    return _ATTN_IMPL
+
+
+def init_dense(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return ((xf * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)
+            ).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float
+               ) -> jax.Array:
+    """x: (B, S, H, d); positions: (B, S) int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,d/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: tuple) -> jax.Array:
+    """M-RoPE (qwen2-vl): positions (3, B, S) = (t, h, w) ids; the head-dim
+    halves are split into ``sections`` (t/h/w) each rotated by its own id.
+    """
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                     # (d/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (3,B,S,d/2)
+    # select which of t/h/w drives each frequency slot
+    idx = jnp.repeat(jnp.arange(3), jnp.array(sections),
+                     total_repeat_length=d // 2)     # (d/2,)
+    onehot = jax.nn.one_hot(idx, 3, dtype=jnp.float32)   # (d/2, 3)
+    angles = jnp.einsum("tbsd,dt->bsd", angles, onehot)  # pick per-slot id
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    hd = cfg.resolved_head_dim()
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": init_dense(ks[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qkv_bias:
+        p["b_q"] = jnp.zeros((cfg.num_heads * hd,), dtype)
+        p["b_k"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+        p["b_v"] = jnp.zeros((cfg.num_kv_heads * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.ones((hd,), dtype)
+        p["k_norm_scale"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _causal_window_mask(sq: int, skv: int, q_offset, window,
+                        causal: bool) -> jax.Array:
+    """(sq, skv) bool mask. ``window`` may be a traced scalar (0 = off)."""
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    window = jnp.asarray(window)
+    eff = jnp.where(window > 0, window, jnp.int32(2 ** 30))
+    mask &= (q_pos - k_pos) < eff
+    return mask
+
+
+def attention_core(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window=0, q_offset=0,
+                   kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Attention dispatcher. q: (B,Sq,Hq,d), k/v: (B,Skv,Hkv,d) ->
+    (B,Sq,Hq,dv). ``kv_len``: optional (B,) valid length (decode caches).
+    """
+    # blockwise pays off for long multi-query attention; decode (Sq == 1)
+    # is a streaming matvec where the scan machinery only adds carries
+    if (_ATTN_IMPL == "blockwise" and k.shape[1] > _ATTN_CHUNK
+            and q.shape[1] > 1):
+        return _attention_blockwise(q, k, v, causal=causal, window=window,
+                                    q_offset=q_offset, kv_len=kv_len,
+                                    chunk=_ATTN_CHUNK)
+    return _attention_naive(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset, kv_len=kv_len)
+
+
+def _attention_naive(q, k, v, *, causal, window, q_offset, kv_len):
+    """Full-score attention (baseline): materializes (B,H,Sq,Skv) fp32.
+    GQA via reshape to (B, Skv, Hkv, group, d) — no KV materialized
+    repeat."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]                # may differ from d (MLA)
+    group = hq // hkv
+    scale = d ** -0.5
+    qg = q.reshape(b, sq, hkv, group, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32) * scale,
+                   k.astype(jnp.float32))
+    mask = _causal_window_mask(sq, skv, q_offset, window, causal)
+    if kv_len is not None:
+        mask = mask[None] & (jnp.arange(skv)[None, None, :]
+                             < kv_len[:, None, None])
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+    else:
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def _attention_blockwise(q, k, v, *, causal, window, q_offset, kv_len,
+                         chunk):
+    """Online-softmax scan over KV chunks (flash-style, XLA path).
+
+    The lowered HLO holds one (B,H,Sq,chunk) score block at a time
+    instead of the full S^2 tensor; dots take bf16 inputs with fp32
+    accumulation (``preferred_element_type``), the MXU-native form.
+
+    The body is wrapped in ``named_scope('flashfusable')``: on the real
+    TPU target the Pallas lookaside kernel (kernels/flash_attention.py,
+    validated vs the oracle) fuses this entire region in VMEM — the
+    roofline analysis uses the scope to report a flash-adjusted memory
+    term alongside the raw XLA-path one.
+    """
+    with jax.named_scope("flashfusable"):
+        return _attention_blockwise_impl(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_len=kv_len, chunk=chunk)
+
+
+def _attention_blockwise_impl(q, k, v, *, causal, window, q_offset, kv_len,
+                              chunk):
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    dv = v.shape[-1]
+    group = hq // hkv
+    scale = jnp.float32(d ** -0.5)
+    nc = -(-skv // chunk)
+    pad = nc * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, nc, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nc, chunk, hkv, dv).transpose(1, 0, 2, 3, 4)
+    qg = q.reshape(b, sq, hkv, group, d)
+    # Pin the layout the scan body must keep (matching the strategy of
+    # shard_attention_qkv): heads divisible -> shard the kv-head axis;
+    # else sequence-shard q/scores/acc and replicate the KV chunks.
+    from repro.models.sharding import _mesh_axes
+    ba = batch_axes()
+    tp_sizes = None
+    mesh = jax.sharding.get_abstract_mesh()
+    head_mode = False
+    if mesh is not None and "model" in mesh.axis_names:
+        tp = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+        head_mode = (hkv % tp == 0)
+    if head_mode:
+        qg = shard(qg, P(ba, None, "model", None, None))
+        kc = shard(kc, P(None, ba, None, "model", None))
+        vc = shard(vc, P(None, ba, None, "model", None))
+        s_spec = P(ba, "model", None, None, None)       # (b,hkv,g,sq,ck)
+        acc_spec = P(ba, "model", None, None, None)     # (b,hkv,g,sq,dv)
+    else:
+        qg = shard(qg, P(ba, "model", None, None, None))
+        kc = shard(kc, P(None, ba, None, None, None))
+        vc = shard(vc, P(None, ba, None, None, None))
+        s_spec = P(ba, None, None, "model", None)
+        acc_spec = P(ba, None, None, "model", None)
+    # transpose q ONCE outside the scan so the per-chunk dot emits
+    # (b,hkv,g,sq,ck) directly (an in-loop transpose materializes an
+    # extra S^2-proportional pass per chunk)
+    qt = qg.transpose(0, 2, 3, 1, 4)                    # (b,hkv,g,sq,d)
+    q_pos = q_offset + jnp.arange(sq, dtype=jnp.int32)
+    eff_w = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
+                      jnp.int32(2 ** 30))
+    valid_len = (jnp.asarray(kv_len, jnp.int32) if kv_len is not None
+                 else jnp.full((b,), skv, jnp.int32))
+
+    def body(carry, inp):
+        m, l, acc = carry              # (b,hkv,g,sq,1) x2, (b,hkv,g,sq,dv)
+        ci, k_blk, v_blk = inp
+        s = jax.lax.dot_general(       # bf16 x bf16 -> f32
+            qt, k_blk, (((4,), (3,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32)  # (b,hkv,g,sq,chunk)
+        s = s * scale
+        s = shard(s, s_spec)
+        k_pos = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        mask = k_pos[None, :] < valid_len[:, None]          # (b,chunk)
+        mask = mask[:, None, :] & jnp.ones((sq, 1), bool)   # (b,sq,chunk)
+        if causal:
+            mask &= q_pos[None, :, None] >= k_pos[None, None, :]
+        mask &= (q_pos[None, :, None] - k_pos[None, None, :]) < eff_w
+        s = jnp.where(mask[:, None, None], s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m, m_cur)
+        # zero masked slots explicitly: a fully-masked chunk would give
+        # exp(NEG_INF - NEG_INF) = 1 otherwise
+        p = jnp.exp(s - m_new) * mask[:, None, None]
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(      # bf16 p x bf16 v -> f32
+            p.astype(q.dtype), v_blk, (((4,), (1,)), ((0, 1), (0, 2))),
+            preferred_element_type=jnp.float32)
+        # p: (b,hkv,g,sq,chunk) x v_blk (b,chunk,hkv,dv) -> (b,hkv,g,sq,dv)
+        acc_new = shard(acc * alpha + pv, acc_spec)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hkv, group, sq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, group, sq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hkv, group, sq, dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        jax.checkpoint(body),
+        (m0, l0, a0),
+        (jnp.arange(nc, dtype=jnp.int32), kc, vc))
+    safe = jnp.where(l == 0.0, 1.0, l)
+    out = (acc / safe).transpose(0, 3, 1, 2, 4)   # (b,sq,hkv,g,dv)
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def attention_block(params: dict, cfg: ModelConfig, x: jax.Array,
+                    positions: jax.Array, *, causal: bool = True,
+                    window=0, cache: Optional[dict] = None,
+                    mrope_positions: Optional[jax.Array] = None):
+    """Full attention sub-block. Returns (out, new_cache)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim()
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["b_q"]
+        k = k + params["b_k"]
+        v = v + params["b_v"]
+    q = shard_activation_tp(q)
+    k = shard_activation_tp(k)
+    v = shard_activation_tp(v)
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, s, cfg.num_kv_heads, hd)
+    v = v.reshape(b, s, cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm_scale"], cfg.rms_eps)
+        k = rms_norm(k, params["k_norm_scale"], cfg.rms_eps)
+    if cfg.mrope and mrope_positions is not None:
+        q = apply_mrope(q, mrope_positions, cfg.rope_theta,
+                        cfg.mrope_sections)
+        k = apply_mrope(k, mrope_positions, cfg.rope_theta,
+                        cfg.mrope_sections)
+    else:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = shard_attention_qkv(q, k, v)
+
+    new_cache = None
+    if cache is not None:
+        # decode: insert at cache['pos'], attend over the whole cache
+        ck, cv, pos = cache["k"], cache["v"], cache["pos"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype),
+                                                 pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype),
+                                                 pos, axis=1)
+        new_cache = {"k": ck, "v": cv, "pos": pos + s}
+        kv_len = jnp.full((b,), pos + s, jnp.int32)
+        out = attention_core(q, ck.astype(q.dtype), cv.astype(q.dtype),
+                             causal=causal, window=window, q_offset=pos,
+                             kv_len=kv_len)
+    else:
+        out = attention_core(q, k, v, causal=causal, window=window)
+    out = out.reshape(b, s, cfg.num_heads * hd)
+    out = shard_attention_out(
+        out, attention_seq_mode(cfg.num_heads, cfg.num_kv_heads))
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.mla
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": init_dense(ks[0], cfg.d_model,
+                         cfg.num_heads * m.qk_head_dim, dtype),
+        "w_dkv": init_dense(ks[1], cfg.d_model, m.kv_lora_rank, dtype),
+        "w_kr": init_dense(ks[2], cfg.d_model, m.qk_rope_head_dim, dtype),
+        "kv_norm_scale": jnp.ones((m.kv_lora_rank,), dtype),
+        "w_uk": init_dense(ks[3], m.kv_lora_rank,
+                           cfg.num_heads * m.qk_nope_head_dim, dtype),
+        "w_uv": init_dense(ks[4], m.kv_lora_rank,
+                           cfg.num_heads * m.v_head_dim, dtype),
+        "wo": init_dense(ks[5], cfg.num_heads * m.v_head_dim,
+                         cfg.d_model, dtype),
+    }
+
+
+def mla_block(params: dict, cfg: ModelConfig, x: jax.Array,
+              positions: jax.Array, *, cache: Optional[dict] = None):
+    """MLA: KV compressed to (kv_lora + rope) per token — this IS the KV
+    cache (MLA's contribution: ~9x smaller cache than GQA)."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    q = (x @ params["wq"]).reshape(b, s, h, m.qk_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rms_norm(x @ params["w_dkv"], params["kv_norm_scale"],
+                    cfg.rms_eps)                       # (b, s, r)
+    k_rope = apply_rope((x @ params["w_kr"])[:, :, None, :], positions,
+                        cfg.rope_theta)                # (b, s, 1, dr)
+
+    new_cache = None
+    if cache is not None:
+        cc, cr, pos = cache["c_kv"], cache["k_rope"], cache["pos"]
+        cc = jax.lax.dynamic_update_slice_in_dim(
+            cc, c_kv.astype(cc.dtype), pos, axis=1)
+        cr = jax.lax.dynamic_update_slice_in_dim(
+            cr, k_rope[:, :, 0].astype(cr.dtype), pos, axis=1)
+        new_cache = {"c_kv": cc, "k_rope": cr, "pos": pos + s}
+        c_kv, k_rope = cc.astype(x.dtype), cr.astype(x.dtype)[:, :, None]
+        q_offset, skv = pos, cc.shape[1]
+        kv_len = jnp.full((b,), pos + s, jnp.int32)
+    else:
+        q_offset, skv, kv_len = 0, s, None
+
+    k_nope = (c_kv @ params["w_uk"]).reshape(b, skv, h, m.qk_nope_head_dim)
+    v = (c_kv @ params["w_uv"]).reshape(b, skv, h, m.v_head_dim)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, skv, h, m.qk_rope_head_dim))],
+        axis=-1)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qfull, k, v = shard_attention_qkv(qfull, k, v)
+    # MLA scales by full qk head dim
+    out = attention_core(qfull, k, v, causal=True, q_offset=q_offset,
+                         kv_len=kv_len)
+    out = out.reshape(b, s, h * m.v_head_dim)
+    out = shard_attention_out(out, attention_seq_mode(h, h))
+    return out @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": init_dense(ks[0], d_model, d_ff, dtype),
+        "w_up": init_dense(ks[1], d_model, d_ff, dtype),
+        "w_down": init_dense(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_block(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    h = shard_activation_tp(h)
+    return h @ params["w_down"]

@@ -1,0 +1,214 @@
+"""Sharding rules: logical roles -> mesh PartitionSpecs.
+
+Parameters are plain pytrees (nested dicts). Specs are derived from leaf
+*paths* by role rules (Megatron-style TP):
+
+  column-parallel (out dim on 'model'):  wq wk wv w_gate w_up lm_head
+                                         w_uk w_uv w_qa w_qb embed(d dim)
+  row-parallel    (in dim on 'model'):   wo w_down out_proj
+  expert-parallel (E dim on 'model'):    experts/* 3-D weights
+  replicated:                            norms, scalars, small biases
+
+Activation helpers shard (B, S, D) residuals over (pod,data) x batch and —
+when sequence parallelism is on — S over 'model'.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# leaf-name -> rule
+_COLUMN = {"wq", "wk", "wv", "w_gate", "w_up", "lm_head", "w_uk", "w_uv",
+           "w_qa", "w_qb", "w_kr", "in_proj", "conv_w", "b_q", "b_k", "b_v",
+           "b_in"}
+_ROW = {"wo", "w_down", "out_proj"}
+_EMBED = {"embed", "pos_embed"}
+_REPLICATED_SUFFIX = {"scale", "bias", "a_log", "d_skip", "dt_bias", "b_o",
+                      "b_down", "router", "w_dkv", "norm"}
+
+
+def spec_for_leaf(path: str, ndim: int, scanned: bool) -> P:
+    """PartitionSpec for a parameter leaf.
+
+    ``scanned`` leaves carry a leading layer dim (always unsharded).
+    """
+    name = path.split("/")[-1].lower()
+    body = _body_spec(path, name, ndim - (1 if scanned else 0))
+    if scanned:
+        return P(None, *tuple(body))
+    return body
+
+
+def _body_spec(path: str, name: str, ndim: int) -> P:
+    is_expert = "experts" in path
+    if is_expert and ndim == 3:
+        # (E, d_in, d_out): expert-parallel over 'model'
+        return P("model", None, None)
+    if name in _EMBED:
+        # (vocab, d): vocab-parallel — lookups lower to masked local
+        # gather + all-reduce; the (tied) LM head stays column-parallel.
+        return P("model", None)
+    if name in _ROW:
+        return P(*(["model"] + [None] * (ndim - 1)))
+    if name in _COLUMN:
+        if ndim == 1:                    # column bias
+            return P("model")
+        return P(*([None] * (ndim - 1) + ["model"]))
+    for suffix in _REPLICATED_SUFFIX:
+        if name == suffix or name.endswith(suffix):
+            return P(*([None] * ndim))
+    return P(*([None] * ndim))           # default: replicated
+
+
+def param_specs(params, scanned_prefixes=("layers", "enc_layers",
+                                          "dec_layers")) -> dict:
+    """Derive the full spec pytree from a param pytree."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    out = {}
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", k)) for k in kp)
+        scanned = any(path.startswith(p + "/") or f"/{p}/" in path
+                      for p in scanned_prefixes)
+        _set(out, path.split("/"), spec_for_leaf(path, leaf.ndim, scanned))
+    return out
+
+
+def _set(d: dict, keys, val):
+    for k in keys[:-1]:
+        d = d.setdefault(k, {})
+    d[keys[-1]] = val
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding
+# ---------------------------------------------------------------------------
+
+_BATCH_AXES = ("pod", "data")
+
+
+def _mesh_axes() -> set:
+    mesh = jax.sharding.get_abstract_mesh()
+    return set(mesh.axis_names) if mesh is not None else set()
+
+
+def batch_axes() -> Optional[tuple]:
+    axes = tuple(a for a in _BATCH_AXES if a in _mesh_axes())
+    return axes if axes else None
+
+
+def shard(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint if inside a mesh context, else no-op.
+
+    Spec axis names not present in the current mesh are dropped, and
+    entries whose dimension is not divisible by the mesh-axis extent are
+    replicated — model code annotates unconditionally and stays valid on
+    any mesh and any (ragged) dim.
+    """
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.axis_names:
+        return x
+    axes = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    clean = []
+    for i, entry in enumerate(spec):
+        dim = x.shape[i] if i < x.ndim else 1
+        if entry is None:
+            clean.append(None)
+            continue
+        names = entry if isinstance(entry, tuple) else (entry,)
+        kept = tuple(a for a in names if a in axes)
+        extent = 1
+        for a in kept:
+            extent *= sizes[a]
+        if not kept or extent == 0 or dim % extent != 0:
+            clean.append(None)
+        else:
+            clean.append(kept if len(kept) > 1 else kept[0])
+    return jax.lax.with_sharding_constraint(x, P(*clean))
+
+
+def shard_residual(x: jax.Array, sequence_parallel: bool) -> jax.Array:
+    """(B, S, D) residual-stream sharding: batch over (pod,data); with SP,
+    sequence over 'model' (Megatron-SP: norms/elementwise run seq-sharded,
+    attention/mlp gather S and shard heads/features instead)."""
+    ba = batch_axes()
+    seq = "model" if sequence_parallel else None
+    return shard(x, P(ba, seq, None))
+
+
+def shard_activation_tp(x: jax.Array) -> jax.Array:
+    """(..., F) with F TP-sharded (inside attention/MLP); leading dim is
+    batch-sharded when rank >= 3."""
+    if x.ndim >= 3:
+        return shard(x, P(batch_axes(), *([None] * (x.ndim - 2)), "model"))
+    return shard(x, P(*([None] * (x.ndim - 1)), "model"))
+
+
+def shard_batch_only(x: jax.Array) -> jax.Array:
+    ba = batch_axes()
+    return shard(x, P(*((ba,) + (None,) * (x.ndim - 1))))
+
+
+# Perf knob (§Perf): explicit 4-D attention sharding. Without it, XLA is
+# free to shard the QK/AV *contraction* (head_dim) for head counts not
+# divisible by TP — which lowers to an all-reduce of the full (B,H,Sq,Skv)
+# score tensor per matmul (observed: 7.5 GB/op on qwen2-vl).
+_QKV_SHARD = True
+
+
+def set_qkv_sharding(on: bool) -> None:
+    global _QKV_SHARD
+    _QKV_SHARD = on
+
+
+def attention_seq_mode(hq: int, hkv: int) -> bool:
+    """True when attention runs sequence-sharded (heads don't divide TP)."""
+    if not _QKV_SHARD:
+        return False
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    tp = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    return not (hq % tp == 0 and hkv % tp == 0)
+
+
+def shard_attention_out(x: jax.Array, seq_mode: bool) -> jax.Array:
+    """(B, S, F) attention output before the o-projection: keep the
+    sequence sharding in seq mode (a feature-shard constraint here would
+    force a full-seq all-gather + 16x bigger o-proj all-reduces)."""
+    if seq_mode:
+        return shard(x, P(batch_axes(), "model", None))
+    return shard_activation_tp(x)
+
+
+def shard_attention_qkv(q: jax.Array, k: jax.Array, v: jax.Array):
+    """(B,S,H,hd) q/k/v constraints.
+
+    heads divisible by TP  -> shard the head axis (Megatron style);
+    otherwise               -> sequence-shard q and replicate k/v
+                               (sequence-parallel attention: scores stay
+                               local, only the small KV gather crosses
+                               the fabric).
+    """
+    if not _QKV_SHARD or q.shape[1] == 1:
+        # decode: q is one token; constraining k/v here would force the
+        # (possibly seq-sharded) KV cache to gather — leave the cache
+        # sharding authoritative
+        return q, k, v
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
+        return q, k, v
+    tp = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    ba = batch_axes()
+    hq, hkv = q.shape[2], k.shape[2]
+    if hq % tp == 0 and hkv % tp == 0:
+        spec = P(ba, None, "model", None)
+        return (shard(q, spec), shard(k, spec), shard(v, spec))
+    q = shard(q, P(ba, "model", None, None))
+    k = shard(k, P(ba, None, None, None))
+    v = shard(v, P(ba, None, None, None))
+    return q, k, v

@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked parallel form.
+
+Implements the SSD algorithm of arXiv:2405.21060: within fixed-size chunks
+the quadratic (attention-like) form runs on the MXU; chunk boundary states
+are carried by a linear recurrence (lax.scan). Decode uses the O(1)
+recurrent form with conv + SSM state caches.
+
+Shapes: x (B,S,D); d_inner = expand*D; nh heads of head_dim hd;
+B/C projections have n_groups G sharing state dim N (d_state).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import init_dense, rms_norm
+from repro.models.sharding import shard_activation_tp
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # [z, x, B, C, dt] fused input projection
+        "in_proj": init_dense(ks[0], d,
+                              2 * di + 2 * s.n_groups * s.d_state + nh,
+                              dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch), jnp.float32)
+                   * (1.0 / s.d_conv) ** 0.5).astype(dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "d_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm_scale": jnp.ones((di,), dtype),
+        "out_proj": init_dense(ks[2], di, d, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_state)
+    where state carries the last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)           # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else None
+    return y, new_state
+
+
+def _ssd_chunked(xh, dt, a, Bm, Cm, chunk: int,
+                 init_state: Optional[jax.Array] = None):
+    """SSD scan. xh: (B,S,nh,hd), dt: (B,S,nh), a: (nh,) negative,
+    Bm/Cm: (B,S,G,N). Returns (y (B,S,nh,hd), final_state (B,nh,hd,N)).
+    """
+    b, s, nh, hd = xh.shape
+    g = Bm.shape[2]
+    n = Bm.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = nh // g                                     # heads per group
+
+    # chunked views
+    xc = xh.reshape(b, nc, chunk, nh, hd)
+    dtc = dt.reshape(b, nc, chunk, nh)
+    bc = Bm.reshape(b, nc, chunk, g, n)
+    cc = Cm.reshape(b, nc, chunk, g, n)
+
+    da = dtc * a                                     # (b,nc,L,nh) negative
+    cum = jnp.cumsum(da, axis=2)                     # within-chunk cumsum
+    seg_end = cum[:, :, -1]                          # (b,nc,nh)
+
+    # ---- intra-chunk (quadratic/MXU form) --------------------------------
+    # L[i,j] = exp(cum_i - cum_j) for i >= j. Mask BEFORE exp: for i < j
+    # rel > 0 and exp overflows -> inf * 0 = NaN in the backward pass.
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (b,nc,L,L,nh)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    rel = jnp.where(tri[None, None, :, :, None], rel, -1e30)
+    decay = jnp.exp(rel)
+    # scores: C_i . B_j  (per group)
+    cb = jnp.einsum("bclgn,bcmgn->bclmg", cc, bc)         # (b,nc,L,L,g)
+    cb = jnp.repeat(cb, hg, axis=-1)                      # (b,nc,L,L,nh)
+    w = cb * decay * dtc[:, :, None, :, :]                # dt_j on source
+    y_intra = jnp.einsum("bclmh,bcmhd->bclhd", w, xc)
+
+    # ---- chunk states -----------------------------------------------------
+    # state_c = sum_j exp(seg_end - cum_j) * dt_j * B_j x_j^T  (nh,hd,n)
+    w_state = jnp.exp(seg_end[:, :, None, :] - cum) * dtc  # (b,nc,L,nh)
+    bh = jnp.repeat(bc, hg, axis=3)                        # (b,nc,L,nh,n)
+    states = jnp.einsum("bclh,bclhn,bclhd->bchdn", w_state, bh, xc)
+
+    # ---- inter-chunk recurrence (scan over chunks) ------------------------
+    seg_decay = jnp.exp(seg_end)                           # (b,nc,nh)
+
+    def step(carry, inp):
+        st, dec = inp                                      # (b,nh,hd,n)
+        new = carry * dec[:, :, None, None] + st
+        return new, carry                                  # emit state BEFORE chunk
+
+    init = (jnp.zeros((b, nh, hd, n), xh.dtype) if init_state is None
+            else init_state)
+    final, prev_states = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), seg_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)     # (b,nc,nh,hd,n)
+
+    # ---- inter-chunk contribution -----------------------------------------
+    ch = jnp.repeat(cc, hg, axis=3)                        # (b,nc,L,nh,n)
+    y_inter = jnp.einsum("bclhn,bchdn,bclh->bclhd", ch, prev_states,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, s, nh, hd)
+    return y, final
+
+
+def ssm_block(params: dict, cfg: ModelConfig, x: jax.Array, *,
+              cache: Optional[dict] = None):
+    """Full mamba-2 block. Returns (out (B,S,D), new_cache)."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    di = s_cfg.d_inner(cfg.d_model)
+    nh = s_cfg.n_heads(cfg.d_model)
+    hd = s_cfg.head_dim
+    g, n = s_cfg.n_groups, s_cfg.d_state
+
+    zxbcdt = x @ params["in_proj"]
+    zxbcdt = shard_activation_tp(zxbcdt)
+    z, xs, Bm, Cm, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n], axis=-1)
+
+    conv_in = jnp.concatenate([xs, Bm, Cm], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], conv_state)
+    conv_out = jax.nn.silu(conv_out)
+    xs, Bm, Cm = jnp.split(conv_out, [di, di + g * n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    a = -jnp.exp(params["a_log"])                      # (nh,)
+    xh = xs.reshape(b, s, nh, hd)
+    Bm = Bm.reshape(b, s, g, n).astype(jnp.float32)
+    Cm = Cm.reshape(b, s, g, n).astype(jnp.float32)
+
+    if cache is not None and s > 1:
+        # prefill with state: chunked scan seeded from the cached state
+        xh32 = xh.astype(jnp.float32)
+        y, final = _ssd_chunked(xh32, dt, a, Bm, Cm,
+                                min(s_cfg.chunk_size, s),
+                                init_state=cache["ssm"])
+        new_cache = {"conv": new_conv, "ssm": final}
+    elif cache is not None:
+        # recurrent decode: S <- exp(dt a) S + dt B x^T ; y = C S + D x
+        st = cache["ssm"]                              # (b,nh,hd,n)
+        dt1 = dt[:, 0]                                 # (b,nh)
+        dec = jnp.exp(dt1 * a)                         # (b,nh)
+        bh = jnp.repeat(Bm[:, 0], nh // g, axis=1)     # (b,nh,n)
+        ch = jnp.repeat(Cm[:, 0], nh // g, axis=1)
+        xt = xh[:, 0].astype(jnp.float32)              # (b,nh,hd)
+        st = (st * dec[:, :, None, None]
+              + jnp.einsum("bh,bhn,bhd->bhdn", dt1, bh, xt))
+        y = jnp.einsum("bhn,bhdn->bhd", ch, st)[:, None]  # (b,1,nh,hd)
+        new_cache = {"conv": new_conv, "ssm": st}
+    else:
+        xh32 = xh.astype(jnp.float32)
+        y, final = _ssd_chunked(xh32, dt, a, Bm, Cm,
+                                min(s_cfg.chunk_size, s))
+        new_cache = {"conv": new_conv, "ssm": final}
+
+    y = y + params["d_skip"][:, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), params["gate_norm_scale"], cfg.rms_eps)
+    return y @ params["out_proj"], new_cache
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_ch = di + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,415 @@
+"""Roofline analysis from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), from ``compiled.cost_analysis()``
+(FLOPs / bytes of the per-device SPMD program) and the compiled HLO text
+(summed operand bytes of every collective op, also per-device):
+
+    compute    = flops_per_device      / peak_flops          [s]
+    memory     = bytes_per_device      / hbm_bw              [s]
+    collective = coll_bytes_per_device / ici_link_bw         [s]
+
+(equivalent to the assignment's total/(chips*rate) formulation since every
+quantity here is per-chip). A secondary "wire" estimate applies ring
+algorithm multipliers (all-reduce 2(n-1)/n etc.) per collective kind.
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.rdma.cost_model import TPU_V5E
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# wire multiplier per byte of *input* operand for ring algorithms on n devs
+_WIRE_FACTOR = {
+    "all-reduce": lambda n: 2.0 * (n - 1) / n,
+    "all-gather": lambda n: float(n - 1),      # operand is the shard
+    "reduce-scatter": lambda n: (n - 1) / n,
+    "all-to-all": lambda n: (n - 1) / n,
+    "collective-permute": lambda n: 1.0,
+}
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _tensor_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+@dataclass
+class CollectiveStats:
+    op: str
+    count: int = 0            # static instruction count
+    dynamic_count: int = 0    # trip-count-weighted executions
+    operand_bytes: int = 0    # trip-count-weighted bytes
+    wire_bytes: float = 0.0
+
+
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+"
+                    r"([a-z][a-z0-9\-]*)\(")
+_OPERANDS = re.compile(r"%([\w.\-]+)")
+
+
+class HloModule:
+    """Minimal HLO-text model: computations, call graph, trip counts."""
+
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        cur = None
+        for line in text.splitlines():
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(2)
+                self.comps[cur] = []
+                if m.group(1):
+                    self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                else:
+                    self.comps[cur].append(line.strip())
+        # instruction name -> result bytes / dims (sum over tuple elements)
+        self.bytes_of: Dict[str, int] = {}
+        self.dims_of: Dict[str, list] = {}
+        for comp, lines in self.comps.items():
+            for s in lines:
+                m = _INSTR.match(s)
+                if not m:
+                    continue
+                name, ty, _ = m.groups()
+                shapes = _SHAPE_RE.findall(ty)
+                self.bytes_of[name] = sum(
+                    _tensor_bytes(d, dims) for d, dims in shapes)
+                if shapes:
+                    d0, dims0 = shapes[0]
+                    self.dims_of[name] = [int(x) for x in dims0.split(",")
+                                          ] if dims0 else []
+        # parameters also define names: "%p = f32[..] parameter(0)"
+        # (already covered by _INSTR since parameter( matches)
+        self.mult, self.control_mult = self._multipliers()
+
+    # -- trip-count-weighted FLOPs and HBM bytes ---------------------------
+    _SKIP_BYTES = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "while", "call", "conditional", "after-all",
+                   "iota", "partition-id", "replica-id",
+                   # pure data movement: fused into consumers on TPU (the
+                   # consumer's operand bytes still count this data once)
+                   "convert", "copy", "transpose", "reshape", "broadcast",
+                   "reverse", "bitcast-convert"}
+
+    def weighted_flops_bytes(self):
+        """(dot_flops, hbm_bytes, flash_bytes).
+
+        XLA cost_analysis counts while bodies ONCE; this weights every
+        instruction by its loop trip count. FLOPs counts dot/matmul MACs
+        (the roofline-relevant compute); bytes counts fusion-boundary
+        operand+output traffic. ``flash_bytes`` is the share inside
+        ``flashfusable`` named scopes — softmax-block traffic a fused
+        attention kernel keeps in VMEM on the TPU target.
+        """
+        flops = 0.0
+        bytes_ = 0.0
+        flash_bytes = 0.0
+        for comp, lines in self.comps.items():
+            w = self.mult.get(comp, 0.0)
+            wb = self.control_mult.get(comp, 0.0)
+            if w <= 0.0:
+                continue
+            for s in lines:
+                m = _INSTR.match(s)
+                if not m:
+                    continue
+                name, ty, op = m.groups()
+                if op == "dot":
+                    ops = _OPERANDS.findall(
+                        s[s.index("dot(") + 4:s.index(")", s.index("dot("))])
+                    out_shapes = _SHAPE_RE.findall(ty)
+                    out_numel = 1
+                    if out_shapes and out_shapes[0][1]:
+                        for x in out_shapes[0][1].split(","):
+                            out_numel *= int(x)
+                    cd = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", s)
+                    csize = 1
+                    if cd and ops:
+                        lhs_dims = self.dims_of.get(ops[0], [])
+                        for di in (cd.group(1).split(",")
+                                   if cd.group(1) else []):
+                            i = int(di)
+                            if i < len(lhs_dims):
+                                csize *= lhs_dims[i]
+                    flops += w * 2.0 * out_numel * csize
+                if op in self._SKIP_BYTES or wb <= 0.0:
+                    continue
+                paren_at = s.find(op + "(")
+                operand_names = []
+                if paren_at >= 0:
+                    seg = s[paren_at + len(op) + 1:]
+                    depth, buf = 1, []
+                    for ch in seg:
+                        if ch == "(":
+                            depth += 1
+                        elif ch == ")":
+                            depth -= 1
+                            if depth == 0:
+                                break
+                        buf.append(ch)
+                    operand_names = _OPERANDS.findall("".join(buf))
+                traffic = wb * self._instr_traffic(s, name, op,
+                                                   operand_names)
+                bytes_ += traffic
+                if "flashfusable" in s:
+                    flash_bytes += traffic
+        return flops, bytes_, flash_bytes
+
+    def _instr_traffic(self, s: str, name: str, op: str,
+                       operand_names) -> float:
+        """HBM traffic estimate for one instruction.
+
+        Slice-family ops (and fusions containing them) touch only the
+        slice, not the whole buffer — XLA performs dynamic-update-slice
+        in place (input/output aliased). Charging full operand bytes
+        would inflate scan-carried KV caches ~100x.
+        """
+        out_b = self.bytes_of.get(name, 0)
+        op_bytes = [self.bytes_of.get(o, 0) for o in operand_names]
+        total_in = sum(op_bytes)
+        max_in = max(op_bytes) if op_bytes else 0
+
+        kind = op
+        if op == "fusion":
+            cm = re.search(r"calls=%?([\w.\-]+)", s)
+            body = "\n".join(self.comps.get(cm.group(1), [])) if cm else ""
+            if "dynamic-update-slice" in body or " scatter(" in body:
+                kind = "dynamic-update-slice"
+            elif ("dynamic-slice" in body or " gather(" in body) \
+                    and max_in > 4 * out_b:
+                kind = "dynamic-slice"
+        if kind in ("dynamic-update-slice", "scatter"):
+            # read update + small operands, write the updated slice
+            # (the big buffer is aliased in place)
+            return 2.0 * (total_in - max_in)
+        if kind in ("dynamic-slice", "slice", "gather"):
+            return 2.0 * out_b + (total_in - max_in)
+        return total_in + out_b
+
+    def _trip_count(self, cond_comp: str) -> int:
+        """Heuristic: max integer constant in the while condition."""
+        best = 1
+        for s in self.comps.get(cond_comp, []):
+            for m in re.finditer(r"constant\((\d+)\)", s):
+                best = max(best, int(m.group(1)))
+        return best
+
+    def _multipliers(self):
+        """Execution multipliers per computation from the entry.
+
+        Returns (full, control): ``full`` propagates through every edge
+        (fusion bodies included — used for dot-FLOP counting); ``control``
+        propagates only through while/call/conditional (used for HBM byte
+        counting, where fusion internals are register/VMEM-local and only
+        fusion BOUNDARIES touch HBM).
+        """
+        full: Dict[str, float] = {c: 0.0 for c in self.comps}
+        control: Dict[str, float] = {c: 0.0 for c in self.comps}
+        if self.entry is None:
+            ones = {c: 1.0 for c in self.comps}
+            return ones, dict(ones)
+        full[self.entry] = control[self.entry] = 1.0
+        order = list(self.comps)
+        for _ in range(len(order)):
+            changed = False
+            for comp in order:
+                m0 = full.get(comp, 0.0)
+                c0 = control.get(comp, 0.0)
+                if m0 == 0.0 and c0 == 0.0:
+                    continue
+                for s in self.comps[comp]:
+                    im = _INSTR.match(s)
+                    if not im:
+                        continue
+                    op = im.group(3)
+                    if op == "while":
+                        b = re.search(r"body=%?([\w.\-]+)", s)
+                        c = re.search(r"condition=%?([\w.\-]+)", s)
+                        if b:
+                            trips = self._trip_count(c.group(1)) if c else 1
+                            for d, base in ((full, m0), (control, c0)):
+                                for tgt in ([b.group(1)]
+                                            + ([c.group(1)] if c else [])):
+                                    new = base * trips
+                                    if d.get(tgt, 0.0) < new:
+                                        d[tgt] = new
+                                        changed = True
+                        continue
+                    is_control = op in ("call", "conditional")
+                    for attr in ("to_apply", "calls",
+                                 "branch_computations"):
+                        for t in re.finditer(attr + r"=\{?%?([\w.\-]+)", s):
+                            tgt = t.group(1)
+                            if tgt not in full:
+                                continue
+                            if full[tgt] < m0:
+                                full[tgt] = m0
+                                changed = True
+                            if is_control and control[tgt] < c0:
+                                control[tgt] = c0
+                                changed = True
+            if not changed:
+                break
+        return full, control
+
+
+def parse_collectives(hlo_text: str,
+                      default_group: int) -> Dict[str, CollectiveStats]:
+    """Trip-count-weighted operand bytes of every collective (per-device).
+
+    Collectives inside scan/while bodies count once per iteration.
+    Operand shapes are resolved by instruction-name lookup (HLO long form
+    prints operands untyped).
+    """
+    mod = HloModule(hlo_text)
+    stats: Dict[str, CollectiveStats] = {
+        op: CollectiveStats(op) for op in _COLLECTIVES}
+    for comp, lines in mod.comps.items():
+        weight = mod.mult.get(comp, 0.0)
+        if weight <= 0.0:
+            continue
+        for s in lines:
+            m = _INSTR.match(s)
+            if not m:
+                continue
+            name, _ty, op = m.groups()
+            base = op.replace("-start", "")
+            if base not in _COLLECTIVES or op.endswith("-done"):
+                continue
+            # operand names inside the call parens
+            paren = s[s.index(op + "(") + len(op) + 1:]
+            depth, buf = 1, []
+            for ch in paren:
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                buf.append(ch)
+            nbytes = sum(mod.bytes_of.get(o, 0)
+                         for o in _OPERANDS.findall("".join(buf)))
+            g = default_group
+            gm = re.search(r"replica_groups=\{\{([0-9,]+)\}", s)
+            if gm:
+                g = len(gm.group(1).split(","))
+            else:
+                gm2 = re.search(r"replica_groups=\[(\d+),(\d+)\]", s)
+                if gm2:
+                    g = int(gm2.group(2))
+            st = stats[base]
+            st.count += 1
+            st.dynamic_count += int(weight)
+            st.operand_bytes += int(nbytes * weight)
+            st.wire_bytes += nbytes * weight * _WIRE_FACTOR[base](max(g, 2))
+    return stats
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_operand_bytes: float
+    coll_wire_bytes: float
+    coll_counts: Dict[str, int]
+    model_flops_total: float
+    flash_bytes_per_device: float = 0.0
+    compute_s: float = 0.0
+    memory_s: float = 0.0
+    memory_s_flash_adjusted: float = 0.0
+    collective_s: float = 0.0
+    collective_wire_s: float = 0.0
+    dominant: str = ""
+    useful_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+    memory_per_device_gb: float = -1.0
+    compile_seconds: float = 0.0
+
+    def finalize(self) -> "Roofline":
+        hw = TPU_V5E
+        self.compute_s = self.flops_per_device / hw.peak_flops_bf16
+        self.memory_s = self.bytes_per_device / hw.hbm_bw
+        self.memory_s_flash_adjusted = (
+            (self.bytes_per_device - self.flash_bytes_per_device)
+            / hw.hbm_bw)
+        self.collective_s = self.coll_operand_bytes / hw.ici_bw_per_link
+        self.collective_wire_s = self.coll_wire_bytes / hw.ici_bw_per_link
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        self.dominant = max(terms, key=terms.get)
+        total_hlo_flops = self.flops_per_device * self.chips
+        self.useful_ratio = (self.model_flops_total / total_hlo_flops
+                             if total_hlo_flops else 0.0)
+        # fraction of the compute roofline achieved if the step ran at the
+        # max of the three terms (perfect overlap assumption)
+        bound = max(terms.values())
+        ideal = self.model_flops_total / (self.chips * hw.peak_flops_bf16)
+        self.roofline_fraction = ideal / bound if bound else 0.0
+        return self
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},{self.chips},"
+                f"{self.compute_s*1e3:.2f}ms,{self.memory_s*1e3:.2f}ms,"
+                f"{self.collective_s*1e3:.2f}ms,{self.dominant},"
+                f"useful={self.useful_ratio:.2f},"
+                f"roofline={self.roofline_fraction:.2f}")
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*D train, 2*N_active*D forward-only."""
+    n = cfg.active_param_count()
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * shape.tokens
+
+
+def analyze(arch: str, shape_name: str, mesh_name: str, chips: int,
+            cost: dict, hlo_text: str, cfg, shape,
+            tp_size: int, compile_seconds: float = 0.0,
+            memory_per_device_gb: float = -1.0) -> Roofline:
+    mod = HloModule(hlo_text)
+    w_flops, w_bytes, w_flash = mod.weighted_flops_bytes()
+    # XLA's cost_analysis counts while (scan) bodies once — use the
+    # trip-count-weighted numbers; keep raw cost values as a floor.
+    flops = max(w_flops, float(cost.get("flops", 0.0)))
+    bytes_ = max(w_bytes, float(cost.get("bytes accessed", 0.0)))
+    colls = parse_collectives(hlo_text, default_group=tp_size)
+    r = Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_name, chips=chips,
+        flops_per_device=flops,
+        bytes_per_device=bytes_,
+        coll_operand_bytes=sum(c.operand_bytes for c in colls.values()),
+        coll_wire_bytes=sum(c.wire_bytes for c in colls.values()),
+        coll_counts={k: v.count for k, v in colls.items() if v.count},
+        model_flops_total=model_flops(cfg, shape),
+        flash_bytes_per_device=w_flash,
+        compile_seconds=compile_seconds,
+        memory_per_device_gb=memory_per_device_gb,
+    )
+    return r.finalize()

@@ -1,0 +1,1 @@
+from repro.serve.serve_step import decode_step, greedy_generate, prefill_step  # noqa: F401

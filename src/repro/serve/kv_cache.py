@@ -1,0 +1,100 @@
+"""Paged KV-cache management with RDMA page transfer (KV_PAGE traffic).
+
+The serving-layer embodiment of RecoNIC's memory model: KV pages are
+registered memory regions; moving a sequence between serving peers (e.g.
+prefill node -> decode node, the disaggregated-serving pattern) is a batch
+of one-sided RDMA READs of its pages — rung with ONE doorbell
+(batch-requests), classified KV_PAGE by the traffic router.
+
+The page table is host-side metadata (numpy); page payloads live in the
+engine's device pool. Attention itself runs on contiguous caches
+(``serve_step``); this manager handles allocation / eviction / transfer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.memory import BufferPool
+from repro.core.rdma.doorbell import DoorbellCoalescer
+from repro.core.rdma.verbs import Opcode, WQE
+from repro.core.streaming.classifier import (TrafficClass, TransferDesc)
+
+
+@dataclass
+class Page:
+    mr: object                  # MemoryRegion holding the page payload
+    seq_id: int
+    page_idx: int
+
+
+class PagedKVPool:
+    """Fixed-size page allocator over a peer's BufferPool."""
+
+    def __init__(self, engine, peer: int, page_elems: int,
+                 max_pages: int):
+        self.engine = engine
+        self.peer = peer
+        self.page_elems = page_elems
+        self.pool = BufferPool(engine, peer)
+        self.pages: Dict[int, List[Page]] = {}      # seq_id -> pages
+        self.max_pages = max_pages
+        self.allocated = 0
+
+    def append_page(self, seq_id: int) -> Page:
+        if self.allocated >= self.max_pages:
+            raise MemoryError("KV pool exhausted (eviction required)")
+        mr = self.pool.alloc(self.page_elems)
+        page = Page(mr, seq_id, len(self.pages.get(seq_id, [])))
+        self.pages.setdefault(seq_id, []).append(page)
+        self.allocated += 1
+        return page
+
+    def write_page(self, page: Page, data: np.ndarray) -> None:
+        self.pool.write(page.mr, data.reshape(-1))
+
+    def read_page(self, page: Page) -> np.ndarray:
+        return self.pool.read(page.mr)
+
+    def evict(self, seq_id: int) -> int:
+        pages = self.pages.pop(seq_id, [])
+        for p in pages:
+            self.pool.free(p.mr)
+        self.allocated -= len(pages)
+        return len(pages)
+
+    def seq_len_pages(self, seq_id: int) -> int:
+        return len(self.pages.get(seq_id, []))
+
+
+def migrate_sequence(engine, router, src_pool: PagedKVPool,
+                     dst_pool: PagedKVPool, seq_id: int,
+                     qp) -> int:
+    """Move all pages of ``seq_id`` src->dst as ONE doorbell batch of RDMA
+    READs (the paper's batch-requests applied to KV migration).
+
+    Returns number of pages moved.
+    """
+    src_pages = src_pool.pages.get(seq_id, [])
+    if not src_pages:
+        return 0
+    descs = [TransferDesc(TrafficClass.KV_PAGE, p.mr.length * 4,
+                          src=src_pool.peer, dst=dst_pool.peer)
+             for p in src_pages]
+    router.route(descs)
+
+    with DoorbellCoalescer(engine, qp,
+                           flush_threshold=len(src_pages)) as db:
+        dst_pages = []
+        for p in src_pages:
+            dp = dst_pool.append_page(seq_id)
+            dst_pages.append(dp)
+            db.post(WQE(Opcode.READ, qp.qp_num, wr_id=p.page_idx,
+                        local_addr=dp.mr.base, remote_addr=p.mr.base,
+                        length=p.mr.length, rkey=p.mr.rkey))
+    # completions
+    n = len(engine.poll_cq(qp, max_entries=len(src_pages)))
+    src_pool.evict(seq_id)
+    return n

@@ -1,0 +1,87 @@
+"""Serving steps: prefill + decode with sharded KV caches.
+
+``decode_step`` lowers the assigned ``decode_32k`` / ``long_500k`` cells:
+one new token per sequence against a seq_len-deep KV cache. Caches are
+sharded (batch over DP axes, kv-feature dim over 'model') by the same
+rule system as parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models.sharding import batch_axes, shard
+from repro.models.transformer import forward, init_caches
+
+
+def cache_specs(caches) -> dict:
+    """Sharding specs for a cache pytree: batch over dp, features over
+    'model' where divisible-by-convention (kv head-dim product)."""
+    def leaf_spec(path, x):
+        name = path[-1] if path else ""
+        if x.ndim == 0 or name == "pos":
+            return P()
+        if name in ("k", "v"):        # (L, B, S, Hkv, hd)
+            return P(None, ("pod", "data"), None, "model", None)
+        if name in ("c_kv", "k_rope"):  # (L, B, S, r) — latent: replicated r
+            return P(None, ("pod", "data"), None, None)
+        if name == "conv":            # (L, B, K-1, C)
+            return P(None, ("pod", "data"), None, "model")
+        if name == "ssm":             # (L, B, nh, hd, N)
+            return P(None, ("pod", "data"), None, None, None)
+        return P(*([None] * x.ndim))
+
+    flat = jax.tree_util.tree_flatten_with_path(caches)[0]
+    out = {}
+    from repro.models.sharding import _set
+    for kp, leaf in flat:
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in kp]
+        _set(out, keys, leaf_spec(keys, leaf))
+    return out
+
+
+def prefill_step(params, cfg: ModelConfig, batch: dict, caches):
+    """Process the prompt, filling caches. Returns (last_logits, caches)."""
+    logits, new_caches, _ = forward(params, cfg, batch, caches=caches)
+    return logits[:, -1:], new_caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens: jax.Array, caches,
+                pos: jax.Array, extra: Optional[dict] = None):
+    """One decode step. tokens: (B, 1); pos: scalar current position.
+
+    Returns (logits (B, 1, V), new_caches).
+    """
+    b = tokens.shape[0]
+    batch = {"tokens": tokens,
+             "positions": jnp.full((b, 1), pos, jnp.int32)}
+    if extra:
+        batch.update(extra)
+    logits, new_caches, _ = forward(params, cfg, batch, caches=caches)
+    return logits, new_caches
+
+
+def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
+                    max_new: int, max_seq: int, dtype=jnp.float32):
+    """Simple greedy loop for examples/tests (prefill + decode)."""
+    b, s = prompt.shape
+    caches = init_caches(cfg, b, max_seq, dtype)
+    logits, caches = prefill_step(
+        params, cfg, {"tokens": prompt}, caches)
+    tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+    outs = [tok]
+
+    step = jax.jit(functools.partial(decode_step, cfg=cfg))
+    pos = s
+    for _ in range(max_new - 1):
+        logits, caches = step(params, tokens=tok, caches=caches,
+                              pos=jnp.int32(pos))
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
+        outs.append(tok)
+        pos += 1
+    return jnp.concatenate(outs, axis=1)

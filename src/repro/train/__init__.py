@@ -1,0 +1,2 @@
+from repro.train.optimizer import AdamState, adamw_update, init_adam  # noqa: F401
+from repro.train.train_step import make_bucketed_train_step, make_train_step  # noqa: F401

@@ -1,0 +1,102 @@
+"""Pipeline parallelism: microbatch pipeline over a ``stage`` mesh axis.
+
+GPipe-style schedule expressed with ``shard_map`` + ``lax.ppermute`` —
+stage-to-stage activation transfer is exactly an RDMA WRITE-with-immediate
+to the next peer (PIPELINE_ACT traffic class), so the transport pattern
+matches the paper's engine.
+
+The schedule runs T = M + S - 1 ticks for M microbatches over S stages
+(the classic bubble). Each tick: every stage applies its layer block to
+its current microbatch, then activations rotate one stage forward via
+``ppermute``. Stage 0 feeds fresh microbatches; stage S-1 emits outputs.
+
+Weights are pre-sharded by stage (leading stage axis); this module is
+topology-composable: the ``stage`` axis can be any mesh axis (e.g. 'pod'
+for cross-pod pipelining, the lowest-bandwidth boundary — where the
+paper's doorbell economics matter most).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(layer_fn: Callable, mesh: Mesh, stage_axis: str,
+                     n_microbatches: int):
+    """Build a pipelined forward over ``stage_axis``.
+
+    layer_fn(stage_params, x) -> y : one stage's computation.
+    Returns fn(stage_params, x_microbatches) -> y_microbatches where
+    x_microbatches has leading dim n_microbatches (with per-stage weights
+    sharded P(stage_axis, ...)).
+    """
+    n_stages = mesh.shape[stage_axis]
+    assert n_microbatches >= 1
+    ticks = n_microbatches + n_stages - 1
+
+    def staged(params, xs):
+        """Runs inside shard_map: params = this stage's slice (leading dim
+        1), xs = full microbatch stack (replicated)."""
+        params = jax.tree.map(lambda p: p[0], params)
+        stage = jax.lax.axis_index(stage_axis)
+        mb_shape = xs.shape[1:]
+
+        def tick(carry, t):
+            state, outputs = carry          # state: current activation
+            # stage 0 ingests microbatch t (if any remain)
+            fresh = jnp.where(t < n_microbatches,
+                              xs[jnp.minimum(t, n_microbatches - 1)],
+                              jnp.zeros(mb_shape, xs.dtype))
+            x = jnp.where(stage == 0, fresh, state)
+            y = layer_fn(params, x)
+            # last stage records its finished microbatch (index t-(S-1))
+            out_idx = t - (n_stages - 1)
+            valid = (out_idx >= 0) & (out_idx < n_microbatches)
+            outputs = jax.lax.cond(
+                valid,
+                lambda o: o.at[jnp.clip(out_idx, 0, n_microbatches - 1)
+                               ].set(y),
+                lambda o: o,
+                outputs)
+            # rotate activations one stage forward (RDMA WRITE+IMM analog)
+            perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+            state = jax.lax.ppermute(y, stage_axis, perm)
+            return (state, outputs), None
+
+        init = (jnp.zeros(mb_shape, xs.dtype),
+                jnp.zeros((n_microbatches,) + mb_shape, xs.dtype))
+        (_, outputs), _ = jax.lax.scan(
+            tick, init, jnp.arange(ticks, dtype=jnp.int32))
+        # outputs only valid on the last stage; broadcast them to all
+        # stages via a masked psum so out_specs can be replicated
+        outputs = jnp.where(stage == n_stages - 1, outputs, 0)
+        outputs = jax.lax.psum(outputs, stage_axis)
+        return outputs
+
+    other_axes = tuple(a for a in mesh.axis_names if a != stage_axis)
+
+    def run(stage_params, x_microbatches):
+        return jax.shard_map(
+            staged,
+            mesh=mesh,
+            in_specs=(P(stage_axis), P()),
+            out_specs=P(),
+            axis_names={stage_axis} | set(other_axes),
+            check_vma=False,
+        )(stage_params, x_microbatches)
+
+    return run
+
+
+def stage_params_spec(params_one_stage) -> P:
+    """Spec helper: stack per-stage params along a leading 'stage' dim."""
+    return jax.tree.map(lambda _: P("stage"), params_one_stage)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """Pipeline bubble overhead of the GPipe schedule."""
+    return (n_stages - 1) / (n_microbatches + n_stages - 1)

@@ -1,0 +1,207 @@
+"""Training step: loss -> grads -> (bucketed) sync -> AdamW/ZeRO-1 update.
+
+Two gradient-synchronization paths, mirroring the paper's two doorbell
+modes (§VI-C):
+
+* ``xla``      — "single-request": plain pjit; XLA inserts one all-reduce
+                 per parameter tensor in the backward pass.
+* ``bucketed`` — "batch-requests": the whole step runs in a partial-manual
+                 ``shard_map`` (manual over the DP axes, auto over
+                 'model'), gradients are coalesced into fixed-byte buckets
+                 by the DoorbellCoalescer planner, and each bucket is ONE
+                 explicit ``psum`` (or ``psum_scatter`` under ZeRO-1) —
+                 n_params collectives become n_buckets.
+
+Optionally (``compress_grads``) buckets are int8-quantized with error
+feedback before crossing the 'pod' axis — the Streaming Compute block in
+its training role.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.rdma.doorbell import plan_buckets
+from repro.models.sharding import param_specs
+from repro.models.transformer import loss_fn
+from repro.train.optimizer import (
+    AdamState, adamw_update, clip_by_global_norm, constrain, init_adam,
+    zero1_specs,
+)
+
+
+def _microbatch_grads(params, cfg: ModelConfig, batch: dict,
+                      tcfg: TrainConfig):
+    """Grad accumulation over microbatches via lax.scan."""
+    n = tcfg.microbatches
+
+    def lf(p, b):
+        return loss_fn(p, cfg, b, remat=tcfg.remat,
+                       sequence_parallel=tcfg.sequence_parallel)
+
+    if n <= 1:
+        return jax.value_and_grad(lf)(params, batch)
+
+    def split(x):
+        return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+
+    def body(acc, mb):
+        loss, grads = jax.value_and_grad(lf)(params, mb)
+        acc_loss, acc_g = acc
+        return (acc_loss + loss,
+                jax.tree.map(jnp.add, acc_g, grads)), None
+
+    zero = (jnp.float32(0),
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))
+    (loss_sum, g_sum), _ = jax.lax.scan(body, zero, micro)
+    inv = 1.0 / n
+    return loss_sum * inv, jax.tree.map(lambda g: g * inv, g_sum)
+
+
+# ---------------------------------------------------------------------------
+# Path 1: XLA-native sync ("single-request")
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
+                    mesh=None):
+    """Returns train_step(params, opt_state, batch) -> (loss, params, opt).
+
+    pjit path: gradient all-reduces inserted by XLA (one per tensor).
+    ZeRO-1 via sharding constraints on the optimizer state.
+    """
+
+    def step(params, opt_state: AdamState, batch):
+        loss, grads = _microbatch_grads(params, cfg, batch, tcfg)
+        grads, _ = clip_by_global_norm(grads, tcfg.grad_clip)
+        if tcfg.zero1 and mesh is not None:
+            dp_axes = tuple(a for a in ("pod", "data")
+                            if a in mesh.axis_names)
+            dp_size = 1
+            for a in dp_axes:
+                dp_size *= mesh.shape[a]
+            pspecs = param_specs(params)
+            ospecs = zero1_specs(params, pspecs, dp_axes, dp_size)
+            grads = constrain(grads, ospecs)       # reduce-scatter boundary
+            opt_state = AdamState(opt_state.step,
+                                  constrain(opt_state.m, ospecs),
+                                  constrain(opt_state.v, ospecs))
+            new_params, new_opt = adamw_update(grads, opt_state, params,
+                                               tcfg)
+            new_params = constrain(new_params, pspecs)  # all-gather params
+            new_opt = AdamState(new_opt.step,
+                                constrain(new_opt.m, ospecs),
+                                constrain(new_opt.v, ospecs))
+        else:
+            new_params, new_opt = adamw_update(grads, opt_state, params,
+                                               tcfg)
+        return loss, new_params, new_opt
+
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Path 2: doorbell-batched bucketed sync ("batch-requests")
+# ---------------------------------------------------------------------------
+
+def _bucketize(grads, bucket_bytes: int):
+    """Plan buckets over the flattened grad leaves (backward order)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    sizes = [int(l.size) * 4 for l in leaves]
+    buckets = plan_buckets(sizes, bucket_bytes)
+    return leaves, treedef, buckets
+
+
+def bucketed_sync(grads, axes: tuple, bucket_bytes: int,
+                  compress: bool = False, residuals=None):
+    """Explicit bucketed all-reduce inside shard_map manual axes.
+
+    Each bucket: concat leaves -> ONE psum -> split. With ``compress``,
+    cross-'pod' reduction is int8 with error feedback (residuals pytree).
+    Returns (synced_grads, new_residuals).
+    """
+    from repro.core.streaming.compress import compressed_all_reduce
+
+    leaves, treedef, buckets = _bucketize(grads, bucket_bytes)
+    out = [None] * len(leaves)
+    res_leaves = (jax.tree.leaves(residuals) if residuals is not None
+                  else None)
+    new_res = [None] * len(leaves) if res_leaves is not None else None
+
+    for b in buckets:
+        flat = jnp.concatenate(
+            [leaves[i].reshape(-1).astype(jnp.float32) for i in b.leaf_ids])
+        if compress and res_leaves is not None:
+            # intra-pod fp32 psum, cross-pod compressed
+            intra = tuple(a for a in axes if a != "pod")
+            if intra:
+                flat = jax.lax.psum(flat, intra)
+            res_flat = jnp.concatenate(
+                [res_leaves[i].reshape(-1) for i in b.leaf_ids])
+            if "pod" in axes:
+                flat, res_flat = compressed_all_reduce(flat, res_flat,
+                                                       "pod")
+            offset_r = 0
+            for i in b.leaf_ids:
+                n = leaves[i].size
+                new_res[i] = res_flat[offset_r:offset_r + n].reshape(
+                    leaves[i].shape)
+                offset_r += n
+        else:
+            flat = jax.lax.psum(flat, axes)
+        offset = 0
+        for i in b.leaf_ids:
+            n = leaves[i].size
+            out[i] = flat[offset:offset + n].reshape(leaves[i].shape
+                                                     ).astype(leaves[i].dtype)
+            offset += n
+
+    synced = treedef.unflatten(out)
+    residuals_out = (treedef.unflatten(new_res)
+                     if new_res is not None else None)
+    return synced, residuals_out
+
+
+def make_bucketed_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh):
+    """shard_map path: manual over DP axes, auto over 'model'.
+
+    The returned step has signature (params, opt, batch, residuals) ->
+    (loss, params, opt, residuals). Dispatch count = number of buckets.
+    """
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dp_size = 1
+    for a in dp_axes:
+        dp_size *= mesh.shape[a]
+    bucket_bytes = int(tcfg.grad_bucket_mb * (1 << 20)) or (16 << 20)
+
+    def local_step(params, opt_state, batch, residuals):
+        # per-device microbatch; mean across devices via bucketed psum
+        loss, grads = _microbatch_grads(params, cfg, batch, tcfg)
+        grads = jax.tree.map(lambda g: g / dp_size, grads)
+        grads, residuals = bucketed_sync(
+            grads, dp_axes, bucket_bytes,
+            compress=tcfg.compress_grads, residuals=residuals)
+        loss = jax.lax.psum(loss, dp_axes) / dp_size
+        grads, _ = clip_by_global_norm(grads, tcfg.grad_clip)
+        new_params, new_opt = adamw_update(grads, opt_state, params, tcfg)
+        return loss, new_params, new_opt, residuals
+
+    batch_spec = P(dp_axes if len(dp_axes) > 1 else dp_axes[0])
+
+    def step(params, opt_state, batch, residuals):
+        return jax.shard_map(
+            local_step,
+            mesh=mesh,
+            in_specs=(P(), P(), batch_spec, P()),
+            out_specs=(P(), P(), P(), P()),
+            axis_names=set(dp_axes),
+            check_vma=False,
+        )(params, opt_state, batch, residuals)
+
+    return step

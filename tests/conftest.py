@@ -1,0 +1,12 @@
+import os
+import sys
+
+# Tests must see exactly ONE device (the dry-run forces 512 in its own
+# subprocess only). Keep XLA flags clean here.
+os.environ.pop("XLA_FLAGS", None)
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_enable_x64", False)

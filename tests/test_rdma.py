@@ -1,0 +1,279 @@
+"""RDMA engine semantics: verbs, doorbells, batching, errors, placement —
+plus hypothesis property tests for the transport and bucket planner."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.memory import BufferPool
+from repro.core.rdma import (CQEStatus, DoorbellCoalescer, Opcode,
+                             RDMAEngine, WQE, plan_buckets)
+from repro.core.rdma.doorbell import choose_bucket_bytes, predicted_sync_time
+from repro.core.rdma.verbs import Placement
+
+
+@pytest.fixture
+def eng():
+    return RDMAEngine(n_peers=2, pool_size=4096)
+
+
+def _pair(eng):
+    return eng.create_qp(0, 1), eng.create_qp(1, 0)
+
+
+class TestVerbs:
+    def test_read(self, eng):
+        qp, _ = _pair(eng)
+        mr = eng.register_mr(1, 0, 256)
+        eng.write_buffer(1, 0, np.arange(32, dtype=np.float32))
+        eng.post_send(qp, WQE(Opcode.READ, qp.qp_num, 1, local_addr=512,
+                              remote_addr=0, length=32, rkey=mr.rkey))
+        eng.ring_sq_doorbell(qp)
+        cqe = eng.poll_cq(qp)[0]
+        assert cqe.status is CQEStatus.SUCCESS and cqe.byte_len == 32
+        np.testing.assert_array_equal(eng.read_buffer(0, 512, 32),
+                                      np.arange(32, dtype=np.float32))
+
+    def test_write(self, eng):
+        qp, _ = _pair(eng)
+        mr = eng.register_mr(1, 100, 64)
+        eng.write_buffer(0, 0, np.full(16, 7.0, np.float32))
+        eng.post_send(qp, WQE(Opcode.WRITE, qp.qp_num, 2, local_addr=0,
+                              remote_addr=100, length=16, rkey=mr.rkey))
+        eng.ring_sq_doorbell(qp)
+        assert eng.poll_cq(qp)[0].status is CQEStatus.SUCCESS
+        np.testing.assert_array_equal(eng.read_buffer(1, 100, 16),
+                                      np.full(16, 7.0, np.float32))
+
+    def test_write_with_immediate_notifies_responder(self, eng):
+        qp, rqp = _pair(eng)
+        mr = eng.register_mr(1, 0, 64)
+        eng.post_send(qp, WQE(Opcode.WRITE_IMM, qp.qp_num, 3, local_addr=0,
+                              remote_addr=0, length=8, rkey=mr.rkey,
+                              imm=0xCAFE))
+        eng.ring_sq_doorbell(qp)
+        rcqe = eng.poll_cq(rqp)[0]
+        assert rcqe.imm == 0xCAFE
+
+    def test_send_recv(self, eng):
+        qp, rqp = _pair(eng)
+        eng.write_buffer(0, 0, np.arange(8, dtype=np.float32))
+        eng.post_recv(rqp, WQE(Opcode.RECV, rqp.qp_num, 9, local_addr=64,
+                               length=8))
+        eng.post_send(qp, WQE(Opcode.SEND, qp.qp_num, 4, local_addr=0,
+                              length=8))
+        eng.ring_sq_doorbell(qp)
+        rcqe = eng.poll_cq(rqp)[0]
+        assert rcqe.opcode is Opcode.RECV and rcqe.byte_len == 8
+        np.testing.assert_array_equal(eng.read_buffer(1, 64, 8),
+                                      np.arange(8, dtype=np.float32))
+
+    def test_send_without_recv_is_rnr(self, eng):
+        qp, _ = _pair(eng)
+        eng.post_send(qp, WQE(Opcode.SEND, qp.qp_num, 5, local_addr=0,
+                              length=8))
+        eng.ring_sq_doorbell(qp)
+        assert eng.poll_cq(qp)[0].status is CQEStatus.RNR
+
+    def test_send_with_invalidate(self, eng):
+        qp, rqp = _pair(eng)
+        mr = eng.register_mr(1, 0, 64)
+        eng.post_recv(rqp, WQE(Opcode.RECV, rqp.qp_num, 1, local_addr=32,
+                               length=4))
+        eng.post_send(qp, WQE(Opcode.SEND_INV, qp.qp_num, 6, local_addr=0,
+                              length=4, inv_rkey=mr.rkey))
+        eng.ring_sq_doorbell(qp)
+        assert not eng.mrs[mr.rkey].valid
+        # subsequent READ against the invalidated rkey fails
+        eng.post_send(qp, WQE(Opcode.READ, qp.qp_num, 7, local_addr=0,
+                              remote_addr=0, length=4, rkey=mr.rkey))
+        eng.ring_sq_doorbell(qp)
+        assert eng.poll_cq(qp)[-1].status is CQEStatus.REMOTE_ACCESS_ERROR
+
+    def test_bad_rkey_and_bounds(self, eng):
+        qp, _ = _pair(eng)
+        mr = eng.register_mr(1, 0, 16)
+        for wqe in [WQE(Opcode.READ, qp.qp_num, 1, remote_addr=0, length=4,
+                        rkey=0xBAD),
+                    WQE(Opcode.READ, qp.qp_num, 2, remote_addr=8, length=16,
+                        rkey=mr.rkey)]:
+            eng.post_send(qp, wqe)
+        eng.ring_sq_doorbell(qp)
+        cqes = eng.poll_cq(qp)
+        assert all(c.status is CQEStatus.REMOTE_ACCESS_ERROR for c in cqes)
+
+    def test_interrupt_mode(self, eng):
+        qp, _ = _pair(eng)
+        mr = eng.register_mr(1, 0, 64)
+        seen = []
+        eng.register_interrupt(qp, seen.append)
+        eng.post_send(qp, WQE(Opcode.READ, qp.qp_num, 11, local_addr=0,
+                              remote_addr=0, length=4, rkey=mr.rkey))
+        eng.ring_sq_doorbell(qp)
+        assert len(seen) == 1 and seen[0].wr_id == 11
+
+    def test_host_mem_placement(self, eng):
+        eng.write_buffer(0, 0, np.arange(4, dtype=np.float32),
+                         Placement.HOST_MEM)
+        got = eng.read_buffer(0, 0, 4, Placement.HOST_MEM)
+        np.testing.assert_array_equal(got, np.arange(4, dtype=np.float32))
+        # staging host -> device (QDMA H2C)
+        eng.host_mem[0][:4] = [9, 8, 7, 6]
+        eng.sync_host_to_dev(0, 0, 4)
+        np.testing.assert_array_equal(eng.read_buffer(0, 0, 4),
+                                      [9, 8, 7, 6])
+
+
+class TestDoorbellBatching:
+    def test_batch_is_one_dispatch(self, eng):
+        qp, _ = _pair(eng)
+        mr = eng.register_mr(1, 0, 1024)
+        eng.write_buffer(1, 0, np.arange(100, dtype=np.float32))
+        d0 = eng.transport.dispatch_count
+        with DoorbellCoalescer(eng, qp, flush_threshold=50) as db:
+            for i in range(50):
+                db.post(WQE(Opcode.READ, qp.qp_num, i, local_addr=2048 + i,
+                            remote_addr=i, length=1, rkey=mr.rkey))
+        assert eng.transport.dispatch_count - d0 == 1      # ONE doorbell
+        assert len(eng.poll_cq(qp, 64)) == 50
+        np.testing.assert_array_equal(eng.read_buffer(0, 2048, 50),
+                                      np.arange(50, dtype=np.float32))
+
+    def test_single_request_is_n_dispatches(self, eng):
+        qp, _ = _pair(eng)
+        mr = eng.register_mr(1, 0, 1024)
+        d0 = eng.transport.dispatch_count
+        for i in range(10):
+            eng.post_send(qp, WQE(Opcode.READ, qp.qp_num, i, local_addr=0,
+                                  remote_addr=0, length=1, rkey=mr.rkey))
+            eng.ring_sq_doorbell(qp)                        # per-WQE ring
+        assert eng.transport.dispatch_count - d0 == 10
+
+    def test_batch_equals_serial_result(self, eng):
+        """Batched execution must be semantically identical to serial."""
+        data = np.arange(64, dtype=np.float32)
+        eng.write_buffer(1, 0, data)
+        mr = eng.register_mr(1, 0, 256)
+        qp, _ = _pair(eng)
+        wqes = [WQE(Opcode.READ, qp.qp_num, i, local_addr=512 + 4 * i,
+                    remote_addr=4 * i, length=4, rkey=mr.rkey)
+                for i in range(8)]
+        for w in wqes:
+            eng.post_send(qp, w)
+        eng.ring_sq_doorbell(qp)                            # batch
+        batched = eng.read_buffer(0, 512, 32)
+
+        eng2 = RDMAEngine(n_peers=2, pool_size=4096)
+        eng2.write_buffer(1, 0, data)
+        mr2 = eng2.register_mr(1, 0, 256)
+        qp2, _ = _pair(eng2)
+        for i in range(8):
+            eng2.post_send(qp2, WQE(Opcode.READ, qp2.qp_num, i,
+                                    local_addr=512 + 4 * i,
+                                    remote_addr=4 * i, length=4,
+                                    rkey=mr2.rkey))
+            eng2.ring_sq_doorbell(qp2)                      # serial
+        np.testing.assert_array_equal(batched,
+                                      eng2.read_buffer(0, 512, 32))
+
+
+class TestBufferPool:
+    def test_alloc_free_coalesce(self, eng):
+        pool = BufferPool(eng, 0, size=1024)
+        a = pool.alloc(256)
+        b = pool.alloc(256)
+        pool.free(a)
+        pool.free(b)                       # should coalesce back
+        c = pool.alloc(512)
+        assert c.base == 0
+        assert pool.utilization() == 512 / 1024
+
+    def test_exhaustion(self, eng):
+        pool = BufferPool(eng, 0, size=128)
+        pool.alloc(128)
+        with pytest.raises(MemoryError):
+            pool.alloc(1)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(sizes=st.lists(st.integers(1, 50 << 20), min_size=1, max_size=60),
+       bucket=st.integers(1 << 20, 128 << 20))
+def test_bucket_plan_properties(sizes, bucket):
+    """Every leaf appears exactly once; bucket fill respects the cap
+    (except single oversized leaves); reverse order preserved."""
+    buckets = plan_buckets(sizes, bucket)
+    seen = [i for b in buckets for i in b.leaf_ids]
+    assert sorted(seen) == list(range(len(sizes)))
+    for b in buckets:
+        assert b.bytes == sum(sizes[i] for i in b.leaf_ids)
+        if len(b.leaf_ids) > 1:
+            assert b.bytes <= bucket or b.bytes - sizes[b.leaf_ids[-1]] \
+                <= bucket
+    flat = [i for b in buckets for i in b.leaf_ids]
+    assert flat == sorted(flat, reverse=True)   # backward (autodiff) order
+
+
+@settings(max_examples=20, deadline=None)
+@given(sizes=st.lists(st.integers(1 << 10, 8 << 20), min_size=2,
+                      max_size=40))
+def test_bucketing_never_worse_than_per_tensor(sizes):
+    """The chosen bucket size is never slower than per-tensor dispatch
+    under the alpha-beta model (doorbell batching's whole point)."""
+    alpha, bw, n = 12e-6, 50e9, 256
+    _, t_best = choose_bucket_bytes(sizes, n, alpha, bw)
+    t_single = predicted_sync_time(len(sizes), sum(sizes), n, alpha, bw)
+    assert t_best <= t_single + 1e-12
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 96)),
+                min_size=1, max_size=24))
+def test_buffer_pool_alloc_free_invariants(ops_seq):
+    """Property: after any alloc/free sequence, live regions never
+    overlap, and freeing everything restores one fully-coalesced block."""
+    eng = RDMAEngine(n_peers=1, pool_size=1024)
+    pool = BufferPool(eng, 0, size=1024)
+    live = []
+    for do_alloc, size in ops_seq:
+        if do_alloc:
+            try:
+                live.append(pool.alloc(size))
+            except MemoryError:
+                pass
+        elif live:
+            pool.free(live.pop())
+    spans = sorted((mr.base, mr.base + mr.length) for mr in live)
+    for (a0, a1), (b0, b1) in zip(spans, spans[1:]):
+        assert a1 <= b0, f"overlap: {spans}"
+    total_live = sum(b - a for a, b in spans)
+    assert abs(pool.utilization() - total_live / 1024) < 1e-9
+    for mr in live:
+        pool.free(mr)
+    assert pool.utilization() == 0.0
+    big = pool.alloc(1024)            # coalesced back to one block
+    assert big.base == 0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 55), st.integers(0, 55),
+                          st.integers(1, 8)), min_size=1, max_size=10))
+def test_transport_batch_equals_sequential(ops_list):
+    """Property: one batched doorbell == the same WQEs serially (on the
+    transport level, arbitrary overlapping copies)."""
+    import jax.numpy as jnp
+    from repro.core.rdma.transport import make_transport
+    init = np.arange(2 * 64, dtype=np.float32).reshape(2, 64)
+
+    t1 = make_transport(2, 64)
+    t1.pool = jnp.asarray(init)
+    plan = [("xfer", 0, 1, src, dst, ln) for (src, dst, ln) in ops_list]
+    t1.execute_batch(plan)
+
+    t2 = make_transport(2, 64)
+    t2.pool = jnp.asarray(init)
+    for p in plan:
+        t2.execute_batch([p])
+    np.testing.assert_array_equal(np.asarray(t1.pool), np.asarray(t2.pool))

@@ -1,0 +1,91 @@
+"""Paper-claim validation: the discrete-event simulator must reproduce the
+measured anchors of §VI (Figs 8-12) — the reproduction's ground truth —
+plus JSON-testcase regression (the paper's §V framework analogue)."""
+import glob
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rdma.cost_model import PAPER_HW
+from repro.core.rdma.simulator import (run_testcase, simulate_dma,
+                                       simulate_host_access, simulate_rdma)
+
+TESTCASE_DIR = os.path.join(os.path.dirname(__file__), "testcases")
+
+
+class TestPaperAnchors:
+    """Each anchor is a number stated in the paper's text."""
+
+    def test_read_single_16k_is_18gbps(self):
+        r = simulate_rdma("read", 16384, 1)
+        assert abs(r.throughput_bps / 1e9 - 18.0) < 18.0 * 0.10
+
+    def test_read_batch_16k_is_89gbps(self):
+        r = simulate_rdma("read", 16384, 50)
+        assert abs(r.throughput_bps / 1e9 - 89.0) < 89.0 * 0.05
+
+    def test_read_batch_32k_near_line_rate(self):
+        r = simulate_rdma("read", 32768, 50)
+        assert abs(r.throughput_bps / 1e9 - 92.0) < 92.0 * 0.05
+        assert r.throughput_bps < 100e9           # never above line rate
+
+    def test_batch_small_latency_approx_400ns(self):
+        r = simulate_rdma("read", 4096, 50)
+        assert 0.2e-6 <= r.latency_per_op <= 0.55e-6
+
+    def test_batch_latency_10x_better_small(self):
+        single = simulate_rdma("read", 4096, 1)
+        batch = simulate_rdma("read", 4096, 50)
+        assert single.latency_per_op / batch.latency_per_op >= 8.0
+
+    def test_write_trends_similar_to_read(self):
+        for size in (4096, 16384, 65536):
+            rd = simulate_rdma("read", size, 50)
+            wr = simulate_rdma("write", size, 50)
+            assert abs(wr.throughput_bps - rd.throughput_bps) \
+                < 0.15 * rd.throughput_bps
+
+    def test_dma_is_13gbs_825pct_of_pcie(self):
+        thr = simulate_dma(1 << 26)
+        assert abs(thr - 13.0e9) < 0.4e9
+        assert abs(thr / PAPER_HW.pcie_peak - 0.825) < 0.02
+
+    def test_host_access_latency_fig8(self):
+        assert abs(simulate_host_access(64) - 600e-9) < 60e-9
+        assert abs(simulate_host_access(2048) - 964e-9) < 96e-9
+        # monotone in message size
+        lats = [simulate_host_access(n) for n in (64, 256, 1024, 2048,
+                                                  8192)]
+        assert lats == sorted(lats)
+
+
+class TestSimulatorProperties:
+    @settings(max_examples=40, deadline=None)
+    @given(payload=st.integers(64, 1 << 20), batch=st.integers(1, 200))
+    def test_throughput_below_line_rate(self, payload, batch):
+        r = simulate_rdma("read", payload, batch)
+        assert r.throughput_bps <= PAPER_HW.line_rate * 8 + 1e-9
+
+    @settings(max_examples=40, deadline=None)
+    @given(payload=st.integers(64, 1 << 18))
+    def test_batching_never_hurts(self, payload):
+        single = simulate_rdma("read", payload, 1)
+        batch = simulate_rdma("read", payload, 50)
+        assert batch.throughput_bps >= single.throughput_bps
+
+    @settings(max_examples=20, deadline=None)
+    @given(payload=st.integers(64, 1 << 16), batch=st.integers(1, 100))
+    def test_dev_mem_qp_no_slower(self, payload, batch):
+        host = simulate_rdma("read", payload, batch, "host_mem")
+        dev = simulate_rdma("read", payload, batch, "dev_mem")
+        assert dev.total_time <= host.total_time + 1e-12
+
+
+def test_json_testcases_regression():
+    """run_testcase over the checked-in testcases (paper §V analogue)."""
+    cases = sorted(glob.glob(os.path.join(TESTCASE_DIR, "*.json")))
+    assert len(cases) >= 6
+    for path in cases:
+        out = run_testcase(path)
+        assert out["pass"], f"{path}: {out['checks']}"
