@@ -1,6 +1,10 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
 # CSV rows. Anchor rows validate the simulator against the paper's own
 # measured numbers (EXPERIMENTS.md cross-references each section).
+# The transport section additionally writes BENCH_transport.json
+# (compiles, cache hit-rate, ops/s) so the perf trajectory of the
+# descriptor-driven executor is tracked across PRs.
+import functools
 import sys
 import traceback
 
@@ -9,7 +13,8 @@ def main() -> None:
     from benchmarks import (bench_dma, bench_grad_buckets,
                             bench_host_latency, bench_kernels,
                             bench_pipeline, bench_rdma_read,
-                            bench_rdma_write, bench_roofline)
+                            bench_rdma_write, bench_roofline,
+                            bench_transport_compile)
 
     sections = [
         ("Fig9/10 RDMA read (single vs batch)", bench_rdma_read.run),
@@ -20,6 +25,10 @@ def main() -> None:
          bench_grad_buckets.run),
         ("grad bucket dispatch counts (lowered HLO)",
          bench_grad_buckets.run_dispatch_counts),
+        ("SecVI-C descriptor-driven doorbell executor (compile "
+         "amortization)",
+         functools.partial(bench_transport_compile.run,
+                           out_json="BENCH_transport.json")),
         ("SecIV-C/D compute-block kernels", bench_kernels.run),
         ("pipeline-parallel schedule (scale-out)", bench_pipeline.run),
         ("Roofline table (from dry-run artifacts)", bench_roofline.run),

@@ -1,4 +1,6 @@
-from repro.core.rdma.doorbell import DoorbellCoalescer, plan_buckets  # noqa: F401
+from repro.core.rdma.doorbell import (  # noqa: F401
+    DoorbellCoalescer, coalesce_plan, plan_buckets,
+)
 from repro.core.rdma.engine import RDMAEngine  # noqa: F401
 from repro.core.rdma.verbs import (  # noqa: F401
     CQE, CQEStatus, MemoryRegion, Opcode, Placement, QueuePair, WQE,

@@ -64,8 +64,19 @@ class TpuV5e:
     mxu_dim: int = 128
 
 
+@dataclass(frozen=True)
+class XLACost:
+    """Cost of the JAX 'engine': a jit dispatch is the doorbell MMIO
+    write of this world, an XLA recompile is the catastrophic analogue
+    the descriptor-driven executor exists to avoid (§VI-C economics with
+    a ~10^5 x penalty on the fixed term)."""
+    compile_s: float = 50e-3       # typical small-program XLA compile
+    dispatch_s: float = 30e-6      # warm-cache jitted dispatch overhead
+
+
 PAPER_HW = PaperHW()
 TPU_V5E = TpuV5e()
+XLA_COST = XLACost()
 
 
 def ring_all_reduce_bytes(nbytes: int, n: int) -> float:

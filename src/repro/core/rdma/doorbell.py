@@ -26,6 +26,44 @@ from typing import Callable, List, Optional, Sequence, Tuple
 from repro.core.rdma.verbs import WQE
 
 
+# ---------------------------------------------------------------------------
+# Transport-plan coalescing (wire-level doorbell batching)
+# ---------------------------------------------------------------------------
+
+def coalesce_plan(plan: Sequence[tuple]) -> List[tuple]:
+    """Merge adjacent same-direction, address-contiguous transfers.
+
+    ``plan`` entries are ``(kind, src, dst, src_addr, dst_addr, length)``.
+    Two consecutive entries merge when they share ``(src, dst)`` and both
+    address ranges extend contiguously — n tiny WQEs produced by a strided
+    producer collapse into one descriptor, the engine analogue of the
+    paper's batched WQE fetch streaming at the steady-state interval.
+
+    Semantics guard: a merged transfer reads its whole source range before
+    writing (memcpy semantics), while the unmerged pair executes
+    sequentially — if entry B's source overlaps entry A's destination the
+    two disagree. That can only happen on a loopback row (``src == dst``),
+    so a merge there additionally requires the combined source and
+    destination ranges to be disjoint.
+    """
+    out: List[tuple] = []
+    for entry in plan:
+        kind, src, dst, src_addr, dst_addr, length = entry
+        if out:
+            k0, s0, d0, sa0, da0, ln0 = out[-1]
+            contiguous = ((s0, d0) == (src, dst)
+                          and src_addr == sa0 + ln0
+                          and dst_addr == da0 + ln0)
+            total = ln0 + length
+            safe = (src != dst
+                    or sa0 + total <= da0 or da0 + total <= sa0)
+            if contiguous and safe and k0 == kind:
+                out[-1] = (k0, s0, d0, sa0, da0, total)
+                continue
+        out.append(entry)
+    return out
+
+
 class DoorbellCoalescer:
     """Accumulate posted WQEs; ring one doorbell when the batch is full.
 

@@ -17,10 +17,11 @@ staged over the "PCIe" path, dev_mem regions live in the device pool.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.rdma.doorbell import coalesce_plan
 from repro.core.rdma.transport import make_transport
 from repro.core.rdma.verbs import (
     CQE, CQEStatus, MemoryRegion, Opcode, ONE_SIDED, Placement, QueuePair,
@@ -32,18 +33,26 @@ class RDMAEngine:
     """One engine instance manages a peer mesh + buffer pool + QPs/MRs."""
 
     def __init__(self, n_peers: int = 2, pool_size: int = 1 << 16,
-                 dtype=np.float32, mesh=None):
+                 dtype=np.float32, mesh=None, coalesce: bool = True):
         self.n_peers = n_peers
         self.pool_size = pool_size
+        self.coalesce = coalesce
         self.transport = make_transport(n_peers, pool_size, dtype, mesh)
         self.mesh = self.transport.mesh
         self.mrs: Dict[int, MemoryRegion] = {}
         self.qps: Dict[int, QueuePair] = {}
+        # (local_peer, remote_peer) -> QPs, insertion-ordered: O(1)
+        # responder lookup instead of a linear scan over all QPs.
+        self._conn_index: Dict[Tuple[int, int], List[QueuePair]] = {}
         # host-RAM regions for Placement.HOST_MEM (the paper's host_mem QPs)
         self.host_mem: Dict[int, np.ndarray] = {
             p: np.zeros(pool_size, dtype) for p in range(n_peers)}
         self.interrupt_handlers: Dict[int, Callable[[CQE], None]] = {}
-        self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0}
+        # "transport" aliases the live transport.stats dict (cache
+        # hits/misses, compiles, coalesced WQEs) — one stats surface.
+        self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0,
+                      "coalesced_wqes": 0,
+                      "transport": self.transport.stats}
 
     # ------------------------------------------------------------------ MRs
     def register_mr(self, peer: int, base: int, length: int,
@@ -65,6 +74,7 @@ class RDMAEngine:
                   placement: Placement = Placement.DEV_MEM) -> QueuePair:
         qp = QueuePair(next_qp_num(), local_peer, remote_peer, placement)
         self.qps[qp.qp_num] = qp
+        self._conn_index.setdefault((local_peer, remote_peer), []).append(qp)
         return qp
 
     # ---------------------------------------------------------------- verbs
@@ -84,7 +94,10 @@ class RDMAEngine:
         self.stats["doorbells"] += 1
 
     def poll_cq(self, qp: QueuePair, max_entries: int = 64) -> List[CQE]:
-        out, qp.cq = qp.cq[:max_entries], qp.cq[max_entries:]
+        out: List[CQE] = []
+        cq = qp.cq
+        while cq and len(out) < max_entries:   # O(polled), not O(len(cq))
+            out.append(cq.popleft())
         return out
 
     def register_interrupt(self, qp: QueuePair,
@@ -145,7 +158,7 @@ class RDMAEngine:
                 if rqp is None or not rqp.rq:
                     status = CQEStatus.RNR
                 else:
-                    recv = rqp.rq.pop(0)
+                    recv = rqp.rq.popleft()
                     n = min(wqe.length, recv.length)
                     plan.append(("xfer", qp.local_peer, qp.remote_peer,
                                  wqe.local_addr, recv.local_addr, n))
@@ -164,10 +177,17 @@ class RDMAEngine:
                 byte_len=wqe.length if status is None else 0,
                 imm=wqe.imm), remote_cqe))
 
-        # ONE collective dispatch for the whole doorbell batch.
+        # Coalesce adjacent contiguous transfers (the descriptor-level
+        # doorbell batching), then ONE pre-compiled dispatch for the batch.
+        if self.coalesce:
+            merged = coalesce_plan(plan)
+            saved = len(plan) - len(merged)
+            self.stats["coalesced_wqes"] += saved
+            self.transport.stats["coalesced_wqes"] += saved
+            plan = merged
         self.transport.execute_batch(plan)
         self.stats["wqes"] += len(wqes)
-        qp.sq_cidx = qp.sq_doorbell
+        qp.retire(len(wqes))
 
         for q, cqe, remote in completions:
             self._complete(q, cqe)
@@ -175,11 +195,11 @@ class RDMAEngine:
                 self._complete(*remote)
 
     def _responder_qp(self, qp: QueuePair) -> Optional[QueuePair]:
-        """Find the paired QP on the remote peer (same connection)."""
-        for other in self.qps.values():
-            if (other.local_peer == qp.remote_peer
-                    and other.remote_peer == qp.local_peer
-                    and other.qp_num != qp.qp_num):
+        """The paired QP on the remote peer (same connection) — indexed
+        lookup on (remote, local), not a scan over every QP."""
+        for other in self._conn_index.get(
+                (qp.remote_peer, qp.local_peer), ()):
+            if other.qp_num != qp.qp_num:
                 return other
         return None
 

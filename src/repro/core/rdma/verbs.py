@@ -17,8 +17,10 @@ from __future__ import annotations
 
 import enum
 import itertools
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Optional
+from itertools import islice
+from typing import Deque, Optional
 
 
 class Opcode(enum.Enum):
@@ -92,17 +94,22 @@ class QueuePair:
     """QP: SQ/RQ descriptor rings + a CQ. ``sq_pidx``/``sq_doorbell`` mimic
     the producer-index doorbell of the paper — WQEs posted beyond the last
     rung doorbell are not visible to the engine until ``ring_sq_doorbell``.
+
+    The rings are ``deque``s (hardware rings are circular buffers): the SQ
+    holds only the not-yet-retired window ``[sq_cidx, sq_pidx)``, the RQ
+    pops RECVs from the head in O(1), and the CQ drains from the head in
+    O(polled) — no O(n) ``pop(0)``/slice anywhere on a completion path.
     """
     qp_num: int
     local_peer: int
     remote_peer: int
     placement: Placement = Placement.DEV_MEM
-    sq: list = field(default_factory=list)       # list[WQE]
-    rq: list = field(default_factory=list)       # list[WQE] (RECVs)
-    cq: list = field(default_factory=list)       # list[CQE]
+    sq: Deque[WQE] = field(default_factory=deque)
+    rq: Deque[WQE] = field(default_factory=deque)   # pre-posted RECVs
+    cq: Deque[CQE] = field(default_factory=deque)
     sq_pidx: int = 0          # producer index (posted)
     sq_doorbell: int = 0      # last doorbell value (visible to engine)
-    sq_cidx: int = 0          # consumer index (executed)
+    sq_cidx: int = 0          # consumer index (executed/retired)
 
     def post_send(self, wqe: WQE) -> None:
         self.sq.append(wqe)
@@ -112,8 +119,15 @@ class QueuePair:
         self.rq.append(wqe)
 
     def pending(self) -> list:
-        """WQEs covered by the doorbell but not yet executed."""
-        return self.sq[self.sq_cidx:self.sq_doorbell]
+        """WQEs covered by the doorbell but not yet executed (the head of
+        the SQ window; retired entries have already been popped)."""
+        return list(islice(self.sq, max(0, self.sq_doorbell - self.sq_cidx)))
+
+    def retire(self, n: int) -> None:
+        """Consume ``n`` executed WQEs from the SQ head."""
+        for _ in range(n):
+            self.sq.popleft()
+        self.sq_cidx += n
 
 
 _qp_counter = itertools.count(1)

@@ -1,0 +1,180 @@
+"""Forward-compatibility shims for older JAX (0.4.x).
+
+The codebase is written against the post-0.6 mesh/shard_map surface:
+
+  * ``jax.set_mesh(mesh)``                 (context manager)
+  * ``jax.sharding.get_abstract_mesh()``   (current mesh, possibly empty)
+  * ``jax.shard_map(f, mesh=, in_specs=, out_specs=, axis_names=, check_vma=)``
+  * ``jax.sharding.AxisType`` / ``jax.make_mesh(..., axis_types=...)``
+
+On a JAX that already provides these, ``install()`` is a no-op.  On the
+0.4.x line (this container ships 0.4.37) each missing attribute is filled
+with a semantically equivalent implementation built from the legacy API:
+``Mesh.__enter__`` (resource env, so bare-``PartitionSpec``
+``with_sharding_constraint`` works), ``jax.experimental.shard_map`` (with
+``axis_names``/``check_vma`` translated to ``auto``/``check_rep``), and a
+thread-local mesh stack backing ``get_abstract_mesh``.
+
+``install()`` runs on ``import repro`` so every entry point (tests,
+benchmarks, examples, subprocess workers) sees one consistent API.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+import threading
+
+import jax
+
+_state = threading.local()
+
+
+def _mesh_stack():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+def current_mesh():
+    """The innermost ``set_mesh`` mesh, or None outside any context."""
+    stack = _mesh_stack()
+    return stack[-1] if stack else None
+
+
+class _EmptyMesh:
+    """Stand-in for the empty AbstractMesh returned outside a mesh
+    context: callers only probe ``axis_names`` / ``axis_sizes``."""
+    axis_names = ()
+    axis_sizes = ()
+
+    def __bool__(self):
+        return False
+
+
+_EMPTY_MESH = _EmptyMesh()
+
+
+class _MeshView:
+    """A mesh with some axes hidden — what ``get_abstract_mesh`` reports
+    inside a shard_map body, where manually-mapped axes no longer exist
+    for automatic sharding (new JAX marks them Manual; callers here only
+    look at ``axis_names``/``axis_sizes``)."""
+
+    def __init__(self, mesh, hidden):
+        kept = [(n, s) for n, s in zip(mesh.axis_names, mesh.axis_sizes)
+                if n not in hidden]
+        self.axis_names = tuple(n for n, _ in kept)
+        self.axis_sizes = tuple(s for _, s in kept)
+
+
+def _manual_axes_stack():
+    if not hasattr(_state, "manual"):
+        _state.manual = []
+    return _state.manual
+
+
+def _get_abstract_mesh():
+    mesh = current_mesh()
+    if mesh is None:
+        return _EMPTY_MESH
+    manual = _manual_axes_stack()
+    if manual and manual[-1]:
+        return _MeshView(mesh, manual[-1])
+    return mesh
+
+
+@contextlib.contextmanager
+def _set_mesh(mesh):
+    """``with jax.set_mesh(mesh):`` — tracks the mesh for
+    ``get_abstract_mesh`` and enters the legacy resource env so
+    ``with_sharding_constraint(x, PartitionSpec(...))`` resolves axes."""
+    _mesh_stack().append(mesh)
+    try:
+        with mesh:
+            yield mesh
+    finally:
+        _mesh_stack().pop()
+
+
+def _make_shard_map(legacy_shard_map):
+    def shard_map(f, mesh=None, in_specs=None, out_specs=None,
+                  axis_names=None, check_vma=None, check_rep=None, **kw):
+        if mesh is None or isinstance(mesh, _EmptyMesh):
+            mesh = current_mesh()
+        if mesh is None:
+            raise ValueError("shard_map: no mesh given and no set_mesh "
+                             "context active")
+        if check_rep is None:
+            check_rep = bool(check_vma) if check_vma is not None else True
+        if axis_names is not None:
+            # new API: only `axis_names` are manually mapped; the rest stay
+            # automatic.  Legacy spelling is the complement set in `auto`.
+            auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            if auto:
+                kw["auto"] = auto
+
+        # While the body traces, hide the mesh from get_abstract_mesh.
+        # New JAX hides the manually-mapped axes natively; on this XLA a
+        # sharding annotation inside a scan within a partial-auto body
+        # additionally aborts the SPMD partitioner (missing manual
+        # subgroup), so the repo's `shard()` helper must see NO axes and
+        # skip its with_sharding_constraint — XLA still propagates input
+        # shardings across the auto axes.
+        hidden = frozenset(mesh.axis_names)
+
+        @functools.wraps(f)
+        def body(*a, **k):
+            _manual_axes_stack().append(hidden)
+            try:
+                return f(*a, **k)
+            finally:
+                _manual_axes_stack().pop()
+
+        return legacy_shard_map(body, mesh=mesh, in_specs=in_specs,
+                                out_specs=out_specs, check_rep=check_rep,
+                                **kw)
+    return shard_map
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _make_make_mesh(legacy_make_mesh):
+    @functools.wraps(legacy_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, **kw):
+        # 0.4.x meshes are always Auto; drop the annotation.
+        del axis_types
+        return legacy_make_mesh(axis_shapes, axis_names, **kw)
+    return make_mesh
+
+
+_LEGACY_SHARD_MAP = False
+
+
+def legacy_shard_map() -> bool:
+    """True when ``jax.shard_map`` is our shim over the legacy
+    experimental API — callers that hit old-XLA limitations (control flow
+    inside partial-auto bodies) use this to pick a workaround."""
+    return _LEGACY_SHARD_MAP
+
+
+def install() -> None:
+    """Idempotently patch the missing new-API names onto ``jax``."""
+    global _LEGACY_SHARD_MAP
+    if not hasattr(jax.sharding, "AxisType"):
+        jax.sharding.AxisType = _AxisType
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        jax.sharding.get_abstract_mesh = _get_abstract_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _set_mesh
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _legacy
+        jax.shard_map = _make_shard_map(_legacy)
+        _LEGACY_SHARD_MAP = True
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        jax.make_mesh = _make_make_mesh(jax.make_mesh)

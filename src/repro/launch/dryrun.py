@@ -141,6 +141,8 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):   # jax<=0.4 returns [dict] per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

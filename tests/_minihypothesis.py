@@ -1,0 +1,109 @@
+"""Minimal, dependency-free stand-in for the ``hypothesis`` API surface
+these tests use (``given``/``settings``/``strategies``).
+
+The container image has no ``hypothesis`` wheel and the project cannot
+install packages, so ``conftest.py`` registers this module under the
+``hypothesis`` name when the real library is absent.  It runs each
+property deterministically over ``max_examples`` pseudo-random samples
+(seeded per-test by the function name, so failures reproduce) and reports
+the failing example like hypothesis does.  It is intentionally tiny: no
+shrinking, no database, just sampling.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import zlib
+
+
+class SearchStrategy:
+    def __init__(self, sample):
+        self._sample = sample
+
+    def sample(self, rng: random.Random):
+        return self._sample(rng)
+
+    def map(self, f):
+        return SearchStrategy(lambda rng: f(self._sample(rng)))
+
+    def filter(self, pred, _tries: int = 100):
+        def draw(rng):
+            for _ in range(_tries):
+                v = self._sample(rng)
+                if pred(v):
+                    return v
+            raise ValueError("filter predicate never satisfied")
+        return SearchStrategy(draw)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value=0, max_value=1 << 30):
+        return SearchStrategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return SearchStrategy(lambda rng: rng.random() < 0.5)
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0):
+        return SearchStrategy(
+            lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(seq):
+        seq = list(seq)
+        return SearchStrategy(lambda rng: rng.choice(seq))
+
+    @staticmethod
+    def lists(elements, min_size=0, max_size=10):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.sample(rng) for _ in range(n)]
+        return SearchStrategy(draw)
+
+    @staticmethod
+    def tuples(*elements):
+        return SearchStrategy(
+            lambda rng: tuple(e.sample(rng) for e in elements))
+
+
+def settings(max_examples: int = 100, deadline=None, **_ignored):
+    def deco(fn):
+        fn._mh_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*arg_strategies, **kw_strategies):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_mh_max_examples", 50)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for i in range(n):
+                drawn_args = tuple(s.sample(rng) for s in arg_strategies)
+                drawn_kw = {k: s.sample(rng)
+                            for k, s in kw_strategies.items()}
+                try:
+                    fn(*args, *drawn_args, **kwargs, **drawn_kw)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): "
+                        f"args={drawn_args!r} kwargs={drawn_kw!r}") from e
+
+        # Hide the strategy-supplied parameters from pytest's fixture
+        # resolution (real hypothesis does the same): positional
+        # strategies bind right-to-left, keyword strategies by name.
+        params = list(inspect.signature(fn).parameters.values())
+        if arg_strategies:
+            params = params[:len(params) - len(arg_strategies)]
+        params = [p for p in params if p.name not in kw_strategies]
+        wrapper.__signature__ = inspect.Signature(params)
+        return wrapper
+    return deco
+
+
+st = strategies

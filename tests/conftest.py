@@ -7,6 +7,18 @@ os.environ.pop("XLA_FLAGS", None)
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import repro  # noqa: E402,F401  (installs the JAX forward-compat shims)
+
 import jax  # noqa: E402
 
 jax.config.update("jax_enable_x64", False)
+
+# The container has no `hypothesis` wheel; register the minimal local
+# stand-in so the property tests still run (see _minihypothesis.py).
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _minihypothesis
+
+    sys.modules["hypothesis"] = _minihypothesis
