@@ -37,6 +37,51 @@ def _drive(transport, plans, execute):
     return time.perf_counter() - t0
 
 
+N_QDMA_LENGTHS = 30
+
+
+def measure_qdma_compiles(seed: int = 0, pool: int = POOL,
+                          n_lengths: int = N_QDMA_LENGTHS) -> dict:
+    """Distinct host_write lengths at random offsets (the QDMA H2C
+    staging path): the seed path compiles once per length, the staged
+    path once per pow2 chunk bucket (lengths 16..256 span 5 buckets).
+    Shared with bench_qp_fairness so there is ONE implementation of the
+    before/after compile-count measurement. Compile counts are
+    process-wide jit-cache deltas, so a warm cache (an earlier call in
+    the same process) only shrinks them; ``stats`` carries the
+    per-transport bucket view."""
+    import jax.numpy as jnp
+    from repro.core.rdma.transport import (
+        LocalTransport, host_write_cache_size, staging_cache_size)
+
+    rng = np.random.default_rng(seed)
+    lengths = rng.choice(np.arange(16, 257), size=n_lengths,
+                         replace=False)
+    writes = [(int(rng.integers(0, pool - ln)),
+               rng.standard_normal(int(ln)).astype(np.float32))
+              for ln in lengths]
+    init = jnp.zeros((2, pool), jnp.float32)
+    a, b = LocalTransport(init), LocalTransport(init)
+    s0 = host_write_cache_size()
+    static_s = _drive(a, writes, lambda w: a.host_write_static(0, *w))
+    static_compiles = host_write_cache_size() - s0
+    d0 = staging_cache_size()
+    staged_s = _drive(b, writes, lambda w: b.host_write(0, *w))
+    staged_compiles = staging_cache_size() - d0
+    return {
+        "distinct_lengths": n_lengths,
+        "static_compiles": static_compiles,
+        "staged_compiles": staged_compiles,
+        "compile_ratio": static_compiles / max(1, staged_compiles),
+        "static_wall_s": static_s,
+        "staged_wall_s": staged_s,
+        "pool_parity": bool(np.array_equal(np.asarray(a.pool),
+                                           np.asarray(b.pool))),
+        "stats": {k: v for k, v in b.stats.items()
+                  if k.startswith("qdma_")},
+    }
+
+
 def run(verbose: bool = True, n_doorbells: int = N_DOORBELLS,
         out_json: str = ""):
     import jax.numpy as jnp
@@ -69,7 +114,12 @@ def run(verbose: bool = True, n_doorbells: int = N_DOORBELLS,
     ratio = static_compiles / max(1, desc_compiles)
     hit_rate = stats["cache_hits"] / max(
         1, stats["cache_hits"] + stats["cache_misses"])
+
+    # -- QDMA staging: host_write per-length recompiles vs chunk buckets --
+    qdma = measure_qdma_compiles()
     model = predict_from_stats(stats, payload=128)
+    model["qdma_writes"] = float(qdma["stats"]["qdma_writes"])
+    model["qdma_compiles"] = float(qdma["stats"]["qdma_compiles"])
 
     rec = {
         "workload": {"doorbells": n_doorbells,
@@ -85,6 +135,13 @@ def run(verbose: bool = True, n_doorbells: int = N_DOORBELLS,
         "warm_doorbells_per_s": n_doorbells / desc_warm_s,
         "warm_wqes_per_s": n_doorbells * WQES_PER_DOORBELL / desc_warm_s,
         "pool_parity_with_seed_executor": parity,
+        "qdma_distinct_lengths": qdma["distinct_lengths"],
+        "qdma_static_compiles": qdma["static_compiles"],
+        "qdma_staged_compiles": qdma["staged_compiles"],
+        "qdma_compile_ratio": qdma["compile_ratio"],
+        "qdma_static_wall_s": qdma["static_wall_s"],
+        "qdma_staged_wall_s": qdma["staged_wall_s"],
+        "qdma_pool_parity": qdma["pool_parity"],
         "cost_model": model,
     }
     if verbose:
@@ -98,10 +155,19 @@ def run(verbose: bool = True, n_doorbells: int = N_DOORBELLS,
               f"hit_rate={hit_rate:.3f}")
         print(f"transport_compile_ratio,0.0,{ratio:.1f}x_fewer_compiles")
         print(f"transport_pool_parity,0.0,{parity}")
+        print(f"qdma_compile_ratio,0.0,{qdma['static_compiles']}static->"
+              f"{qdma['staged_compiles']}staged"
+              f"({qdma['compile_ratio']:.1f}x)")
+        print(f"qdma_pool_parity,0.0,{qdma['pool_parity']}")
     assert parity, "descriptor executor diverged from seed executor"
     assert ratio >= 10.0, (
         f"descriptor path must compile >=10x less, got {ratio:.1f}x "
         f"({static_compiles} static vs {desc_compiles} descriptor)")
+    assert qdma["pool_parity"], "staged QDMA diverged from seed host_write"
+    assert qdma["compile_ratio"] >= 5.0, (
+        f"QDMA staging must compile >=5x less, got "
+        f"{qdma['compile_ratio']:.1f}x ({qdma['static_compiles']} static "
+        f"vs {qdma['staged_compiles']} staged)")
     if out_json:
         with open(out_json, "w") as f:
             json.dump(rec, f, indent=2)

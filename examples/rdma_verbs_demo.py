@@ -65,6 +65,34 @@ def main():
               f"{b.throughput_bps/1e9:5.1f} Gb/s "
               f"({b.throughput_bps/s.throughput_bps:.1f}x)")
 
+    # -- CONCURRENT DOORBELLS: two QPs share the engine fairly ------------
+    # The engine is shared (the paper's key flexibility point), so a deep
+    # SQ could starve a shallow one. Ring with defer=True, then one flush
+    # interleaves both windows round-robin under a WQE budget.
+    deep = eng.create_qp(client, server)           # 24 pending WQEs
+    shallow = eng.create_qp(client, server, weight=1)
+    eng.scheduler, eng.flush_budget = "rr", 8
+    for i in range(24):
+        eng.post_send(deep, WQE(Opcode.READ, deep.qp_num, i,
+                                local_addr=4096 + i, remote_addr=i,
+                                length=1, rkey=mr.rkey))
+    for i in range(4):
+        eng.post_send(shallow, WQE(Opcode.READ, shallow.qp_num, 500 + i,
+                                   local_addr=4200 + i, remote_addr=i,
+                                   length=1, rkey=mr.rkey))
+    eng.ring_sq_doorbell(deep, defer=True)
+    eng.ring_sq_doorbell(shallow, defer=True)
+    counts = eng.flush_doorbells()                 # ONE scheduled batch
+    print(f"2-QP flush: deep got {counts[deep.qp_num]}/8, "
+          f"shallow got {counts[shallow.qp_num]}/8 "
+          f"(rr — the shallow QP is not starved)")
+    while deep.pending() or shallow.pending():     # drain the leftovers
+        eng.flush_doorbells()
+    print(f"2-QP done : deep {len(eng.poll_cq(deep, 64))} CQEs in order, "
+          f"shallow {len(eng.poll_cq(shallow, 64))} CQEs, "
+          f"service={eng.stats['qp_service']}")
+    eng.scheduler, eng.flush_budget = "rr", None
+
     # -- host_mem vs dev_mem placement (the -l flag) -----------------------
     eng.write_buffer(client, 0, np.ones(8, np.float32),
                      Placement.HOST_MEM)

@@ -1,0 +1,48 @@
+#!/usr/bin/env bash
+# CI gate: tier-1 tests + transport benchmarks in smoke mode.
+#
+# Fails if
+#   * any tier-1 test fails, or
+#   * the descriptor/QDMA executors record MORE XLA compiles than the
+#     committed BENCH_transport.json baseline (a compile-cache
+#     regression — the exact failure mode the descriptor-driven
+#     transport exists to prevent), or
+#   * the fairness benchmark's acceptance asserts fail (rr shares within
+#     2x of even, fifo starvation baseline, QDMA >=5x fewer compiles).
+#
+# Usage: scripts/ci.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q
+
+echo "== transport benchmarks (smoke) =="
+python - <<'EOF'
+import json
+import sys
+
+sys.path.insert(0, ".")
+from benchmarks import bench_qp_fairness, bench_transport_compile
+
+# Smoke mode: fewer doorbells, same compile-count semantics. CI artifacts
+# are written next to (never over) the committed baselines.
+rec = bench_transport_compile.run(verbose=True, n_doorbells=20,
+                                  out_json="BENCH_transport.ci.json")
+bench_qp_fairness.run(verbose=True, out_json="BENCH_fairness.ci.json")
+
+baseline = json.load(open("BENCH_transport.json"))
+regressions = []
+for key in ("descriptor_compiles", "qdma_staged_compiles"):
+    base = baseline.get(key)
+    if base is not None and rec[key] > base:
+        regressions.append(f"{key}: {rec[key]} > baseline {base}")
+if regressions:
+    sys.exit("XLA-compile regression vs BENCH_transport.json: "
+             + "; ".join(regressions))
+print("compile counts within baseline:",
+      {k: rec[k] for k in ("descriptor_compiles", "qdma_staged_compiles")})
+EOF
+
+echo "CI OK"

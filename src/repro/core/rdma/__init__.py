@@ -1,5 +1,5 @@
 from repro.core.rdma.doorbell import (  # noqa: F401
-    DoorbellCoalescer, coalesce_plan, plan_buckets,
+    DoorbellCoalescer, coalesce_plan, plan_buckets, schedule_plan,
 )
 from repro.core.rdma.engine import RDMAEngine  # noqa: F401
 from repro.core.rdma.verbs import (  # noqa: F401

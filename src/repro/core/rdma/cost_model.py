@@ -72,11 +72,28 @@ class XLACost:
     a ~10^5 x penalty on the fixed term)."""
     compile_s: float = 50e-3       # typical small-program XLA compile
     dispatch_s: float = 30e-6      # warm-cache jitted dispatch overhead
+    # QDMA staging (host_write): host->device transfer of the padded
+    # staging row + the jitted scatter dispatch. Dominated by the same
+    # dispatch fixed cost; recompiles (one per new chunk bucket) pay
+    # compile_s, which the descriptor-ized path amortizes away.
+    staging_dispatch_s: float = 20e-6
 
 
 PAPER_HW = PaperHW()
 TPU_V5E = TpuV5e()
 XLA_COST = XLACost()
+
+
+def jain_fairness_index(shares) -> float:
+    """Jain's fairness index of per-QP service: (Σx)² / (n·Σx²).
+    1.0 = perfectly even service, 1/n = one QP monopolizes the engine —
+    the multi-QP scheduler's scorecard (cf. ORCA's µs-scale accounting).
+    Empty or all-zero input counts as fair (nothing was contended)."""
+    xs = [float(x) for x in shares]
+    sq = sum(x * x for x in xs)
+    if not xs or sq == 0.0:
+        return 1.0
+    return sum(xs) ** 2 / (len(xs) * sq)
 
 
 def ring_all_reduce_bytes(nbytes: int, n: int) -> float:

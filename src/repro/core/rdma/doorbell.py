@@ -21,7 +21,7 @@ provides:
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.rdma.verbs import WQE
 
@@ -62,6 +62,81 @@ def coalesce_plan(plan: Sequence[tuple]) -> List[tuple]:
                 continue
         out.append(entry)
     return out
+
+
+# ---------------------------------------------------------------------------
+# Multi-QP doorbell scheduling (fair interleave of concurrent SQ windows)
+# ---------------------------------------------------------------------------
+
+def schedule_plan(windows: Sequence[Tuple[int, Sequence]],
+                  scheduler: str = "rr",
+                  weights: Optional[Dict[int, int]] = None,
+                  budget: Optional[int] = None
+                  ) -> Tuple[List[tuple], Dict[int, int]]:
+    """Interleave per-QP doorbell windows into one execution order.
+
+    ``windows`` is the doorbell-arrival-ordered list of ``(qp_id,
+    entries)`` pairs, one per armed QP (qp_ids must be unique); ``entries``
+    is that QP's in-order pending window (entries are opaque — the engine
+    passes WQEs, the conformance tests raw plan tuples). Returns
+    ``(merged, counts)``: ``merged`` is the execution order as ``(qp_id,
+    entry)`` picks, ``counts`` maps each qp_id to how many of its entries
+    were taken.
+
+    Guarantees (the transport conformance contract):
+
+    * per-QP order — each QP's picks are a *prefix* of its window, in
+      posting order (RDMA's intra-QP ordering rule; CQEs follow suit),
+    * budget — at most ``budget`` total entries are taken (``None`` =
+      drain everything), so one flush models a bounded engine service
+      round,
+    * ``scheduler="rr"`` — round-robin over backlogged QPs, ``weights``
+      (default 1) entries per QP per round: no deep SQ can starve the
+      others; with equal weights every backlogged QP's share of a flush
+      is within one quantum of even,
+    * ``scheduler="fifo"`` — the PR-1 drain order: windows execute
+      end-to-end in arrival order (the parity baseline; under a budget a
+      deep first window starves the rest).
+    """
+    if scheduler not in ("rr", "fifo"):
+        raise ValueError(f"scheduler must be rr|fifo, got {scheduler!r}")
+    ids = [qid for qid, _ in windows]
+    if len(set(ids)) != len(ids):
+        raise ValueError("duplicate qp_id in windows")
+    weights = weights or {}
+    total = sum(len(w) for _, w in windows)
+    remaining = total if budget is None else min(budget, total)
+    merged: List[tuple] = []
+    counts: Dict[int, int] = {qid: 0 for qid in ids}
+
+    if scheduler == "fifo":
+        for qid, entries in windows:
+            take = min(len(entries), remaining)
+            merged.extend((qid, e) for e in entries[:take])
+            counts[qid] = take
+            remaining -= take
+            if remaining <= 0:
+                break
+        return merged, counts
+
+    cursors = [0] * len(windows)
+    progressed = True
+    while remaining > 0 and progressed:
+        progressed = False
+        for i, (qid, entries) in enumerate(windows):
+            quantum = max(1, int(weights.get(qid, 1)))
+            take = min(quantum, len(entries) - cursors[i], remaining)
+            if take <= 0:
+                continue
+            merged.extend(
+                (qid, entries[cursors[i] + k]) for k in range(take))
+            cursors[i] += take
+            counts[qid] += take
+            remaining -= take
+            progressed = True
+            if remaining <= 0:
+                break
+    return merged, counts
 
 
 class DoorbellCoalescer:

@@ -11,6 +11,13 @@ Faithfully reproduces the control flow of the paper's workflow (Fig 6):
      collective program on the ICI transport, and pushes CQEs
   5. host polls the CQ (or registers an "interrupt" callback)
 
+The engine is SHARED between host and compute blocks, so concurrent QPs
+contend for it: doorbells may be rung with ``defer=True`` and a single
+``flush_doorbells`` then *interleaves* the armed SQ windows (round-robin,
+weighted by per-QP ``weight``; ``scheduler="fifo"`` keeps the old
+whole-window drain order) under an optional per-flush WQE budget — one
+deep send queue cannot monopolize the engine (cf. ORCA/BALBOA fairness).
+
 QPs/buffers carry a ``host_mem`` / ``dev_mem`` placement tag mirroring
 ``-l host_mem|dev_mem``; host_mem regions live in host RAM (numpy) and are
 staged over the "PCIe" path, dev_mem regions live in the device pool.
@@ -21,7 +28,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.rdma.doorbell import coalesce_plan
+from repro.core.rdma.doorbell import coalesce_plan, schedule_plan
 from repro.core.rdma.transport import make_transport
 from repro.core.rdma.verbs import (
     CQE, CQEStatus, MemoryRegion, Opcode, ONE_SIDED, Placement, QueuePair,
@@ -33,14 +40,24 @@ class RDMAEngine:
     """One engine instance manages a peer mesh + buffer pool + QPs/MRs."""
 
     def __init__(self, n_peers: int = 2, pool_size: int = 1 << 16,
-                 dtype=np.float32, mesh=None, coalesce: bool = True):
+                 dtype=np.float32, mesh=None, coalesce: bool = True,
+                 scheduler: str = "rr", flush_budget: Optional[int] = None):
         self.n_peers = n_peers
         self.pool_size = pool_size
         self.coalesce = coalesce
+        # Multi-QP doorbell scheduling: when several SQ windows are armed
+        # for one flush, "rr" interleaves their WQEs round-robin (weighted
+        # by QueuePair.weight) so one deep SQ cannot starve the others;
+        # "fifo" is the PR-1 drain order (whole windows, arrival order).
+        # ``flush_budget`` bounds WQEs executed per flush (None = drain);
+        # leftovers stay armed for the next flush.
+        self.scheduler = scheduler
+        self.flush_budget = flush_budget
         self.transport = make_transport(n_peers, pool_size, dtype, mesh)
         self.mesh = self.transport.mesh
         self.mrs: Dict[int, MemoryRegion] = {}
         self.qps: Dict[int, QueuePair] = {}
+        self._armed: List[QueuePair] = []   # doorbell arrival order
         # (local_peer, remote_peer) -> QPs, insertion-ordered: O(1)
         # responder lookup instead of a linear scan over all QPs.
         self._conn_index: Dict[Tuple[int, int], List[QueuePair]] = {}
@@ -49,9 +66,12 @@ class RDMAEngine:
             p: np.zeros(pool_size, dtype) for p in range(n_peers)}
         self.interrupt_handlers: Dict[int, Callable[[CQE], None]] = {}
         # "transport" aliases the live transport.stats dict (cache
-        # hits/misses, compiles, coalesced WQEs) — one stats surface.
+        # hits/misses, compiles, coalesced WQEs, qdma_* staging counters)
+        # — one stats surface. "qp_service" accumulates executed WQEs per
+        # qp_num (the fairness ledger the cost model reads).
         self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0,
-                      "coalesced_wqes": 0,
+                      "coalesced_wqes": 0, "flushes": 0,
+                      "qp_service": {},
                       "transport": self.transport.stats}
 
     # ------------------------------------------------------------------ MRs
@@ -71,8 +91,12 @@ class RDMAEngine:
 
     # ------------------------------------------------------------------ QPs
     def create_qp(self, local_peer: int, remote_peer: int,
-                  placement: Placement = Placement.DEV_MEM) -> QueuePair:
-        qp = QueuePair(next_qp_num(), local_peer, remote_peer, placement)
+                  placement: Placement = Placement.DEV_MEM,
+                  weight: int = 1) -> QueuePair:
+        """``weight`` is the fair-scheduler quantum: WQEs offered to this
+        QP per round-robin round when concurrent SQ windows share a flush."""
+        qp = QueuePair(next_qp_num(), local_peer, remote_peer, placement,
+                       weight=weight)
         self.qps[qp.qp_num] = qp
         self._conn_index.setdefault((local_peer, remote_peer), []).append(qp)
         return qp
@@ -84,14 +108,23 @@ class RDMAEngine:
     def post_recv(self, qp: QueuePair, wqe: WQE) -> None:
         qp.post_recv(wqe)
 
-    def ring_sq_doorbell(self, qp: QueuePair,
-                         pidx: Optional[int] = None) -> None:
+    def ring_sq_doorbell(self, qp: QueuePair, pidx: Optional[int] = None,
+                         defer: bool = False) -> None:
         """Ring the SQ producer-index doorbell. ``pidx`` defaults to all
         posted WQEs (batch-requests). Ringing after every single post is
-        the paper's single-request mode."""
+        the paper's single-request mode.
+
+        ``defer=True`` arms the QP without executing — concurrent QPs
+        ring deferred, then one ``flush_doorbells`` interleaves all armed
+        windows into a single scheduled transport batch. A non-deferred
+        ring flushes immediately (serving any other armed QPs too — the
+        engine is shared, exactly the paper's contention point)."""
         qp.sq_doorbell = qp.sq_pidx if pidx is None else pidx
-        self._execute(qp)
+        if qp not in self._armed:
+            self._armed.append(qp)
         self.stats["doorbells"] += 1
+        if not defer:
+            self.flush_doorbells()
 
     def poll_cq(self, qp: QueuePair, max_entries: int = 64) -> List[CQE]:
         out: List[CQE] = []
@@ -124,58 +157,35 @@ class RDMAEngine:
         if h is not None:
             h(cqe)
 
-    def _execute(self, qp: QueuePair) -> None:
-        """Execute all doorbell-covered WQEs as one transport batch."""
-        wqes = qp.pending()
-        if not wqes:
-            return
-        plan: List[tuple] = []
-        completions: List[tuple] = []   # (qp, CQE) after transport runs
-        for wqe in wqes:
-            status = None
-            remote_cqe = None
-            if wqe.opcode in ONE_SIDED:
-                status = self._check_mr(wqe.rkey, qp.remote_peer,
-                                        wqe.remote_addr, wqe.length)
-                if status is None:
-                    if wqe.opcode is Opcode.READ:
-                        plan.append(("xfer", qp.remote_peer, qp.local_peer,
-                                     wqe.remote_addr, wqe.local_addr,
-                                     wqe.length))
-                    else:  # WRITE / WRITE_IMM
-                        plan.append(("xfer", qp.local_peer, qp.remote_peer,
-                                     wqe.local_addr, wqe.remote_addr,
-                                     wqe.length))
-                        if wqe.opcode is Opcode.WRITE_IMM:
-                            rqp = self._responder_qp(qp)
-                            if rqp is not None:
-                                remote_cqe = (rqp, CQE(
-                                    wr_id=wqe.wr_id, qp_num=rqp.qp_num,
-                                    opcode=wqe.opcode, byte_len=wqe.length,
-                                    imm=wqe.imm))
-            elif wqe.opcode in TWO_SIDED:
-                rqp = self._responder_qp(qp)
-                if rqp is None or not rqp.rq:
-                    status = CQEStatus.RNR
-                else:
-                    recv = rqp.rq.popleft()
-                    n = min(wqe.length, recv.length)
-                    plan.append(("xfer", qp.local_peer, qp.remote_peer,
-                                 wqe.local_addr, recv.local_addr, n))
-                    if wqe.opcode is Opcode.SEND_INV and wqe.inv_rkey is not None:
-                        self.invalidate_mr(wqe.inv_rkey)
-                    remote_cqe = (rqp, CQE(
-                        wr_id=recv.wr_id, qp_num=rqp.qp_num,
-                        opcode=Opcode.RECV, byte_len=n,
-                        imm=wqe.imm if wqe.opcode is Opcode.SEND_IMM else None))
-            else:
-                status = CQEStatus.INVALID_OPCODE
+    def flush_doorbells(self) -> Dict[int, int]:
+        """Execute armed SQ windows as ONE scheduled transport batch.
 
-            completions.append((qp, CQE(
-                wr_id=wqe.wr_id, qp_num=qp.qp_num, opcode=wqe.opcode,
-                status=status or CQEStatus.SUCCESS,
-                byte_len=wqe.length if status is None else 0,
-                imm=wqe.imm), remote_cqe))
+        ``schedule_plan`` interleaves the armed windows (``self.scheduler``
+        policy, per-QP ``weight`` quanta, at most ``flush_budget`` WQEs);
+        the merged order is validated WQE-by-WQE, coalesced, and executed
+        as a single descriptor-table dispatch. Each QP's picks are a
+        prefix of its window, so intra-QP execution and CQE order follow
+        posting order regardless of interleaving. QPs with leftover
+        (over-budget) WQEs stay armed. Returns {qp_num: WQEs executed}."""
+        # A budgeted flush serves at most flush_budget WQEs from any QP,
+        # so the snapshot never copies a deep window's tail (keeps each
+        # flush O(budget * n_qps), not O(window depth)).
+        windows = [(qp, qp.pending(self.flush_budget))
+                   for qp in self._armed]
+        windows = [(qp, w) for qp, w in windows if w]
+        if not windows:
+            self._armed = []
+            return {}
+        order, counts = schedule_plan(
+            [(qp.qp_num, wqes) for qp, wqes in windows],
+            scheduler=self.scheduler,
+            weights={qp.qp_num: qp.weight for qp, _ in windows},
+            budget=self.flush_budget)
+        by_num = {qp.qp_num: qp for qp, _ in windows}
+        plan: List[tuple] = []
+        completions: List[tuple] = []   # (qp, CQE, remote) after transport
+        for qp_num, wqe in order:
+            self._admit(by_num[qp_num], wqe, plan, completions)
 
         # Coalesce adjacent contiguous transfers (the descriptor-level
         # doorbell batching), then ONE pre-compiled dispatch for the batch.
@@ -186,13 +196,73 @@ class RDMAEngine:
             self.transport.stats["coalesced_wqes"] += saved
             plan = merged
         self.transport.execute_batch(plan)
-        self.stats["wqes"] += len(wqes)
-        qp.retire(len(wqes))
+
+        served = [n for n in counts.values() if n]
+        if len(served) > 1:
+            self.transport.stats["interleaved_batches"] += 1
+        for qp_num, n in counts.items():
+            if n:
+                by_num[qp_num].retire(n)
+                self.stats["qp_service"][qp_num] = (
+                    self.stats["qp_service"].get(qp_num, 0) + n)
+        self.stats["wqes"] += len(order)
+        self.stats["flushes"] += 1
 
         for q, cqe, remote in completions:
             self._complete(q, cqe)
             if remote is not None:
                 self._complete(*remote)
+        self._armed = [qp for qp in self._armed if qp.pending_count]
+        return counts
+
+    def _admit(self, qp: QueuePair, wqe: WQE, plan: List[tuple],
+               completions: List[tuple]) -> None:
+        """Validate one scheduled WQE: append its transfer(s) to ``plan``
+        and its completion(s) to ``completions``."""
+        status = None
+        remote_cqe = None
+        if wqe.opcode in ONE_SIDED:
+            status = self._check_mr(wqe.rkey, qp.remote_peer,
+                                    wqe.remote_addr, wqe.length)
+            if status is None:
+                if wqe.opcode is Opcode.READ:
+                    plan.append(("xfer", qp.remote_peer, qp.local_peer,
+                                 wqe.remote_addr, wqe.local_addr,
+                                 wqe.length))
+                else:  # WRITE / WRITE_IMM
+                    plan.append(("xfer", qp.local_peer, qp.remote_peer,
+                                 wqe.local_addr, wqe.remote_addr,
+                                 wqe.length))
+                    if wqe.opcode is Opcode.WRITE_IMM:
+                        rqp = self._responder_qp(qp)
+                        if rqp is not None:
+                            remote_cqe = (rqp, CQE(
+                                wr_id=wqe.wr_id, qp_num=rqp.qp_num,
+                                opcode=wqe.opcode, byte_len=wqe.length,
+                                imm=wqe.imm))
+        elif wqe.opcode in TWO_SIDED:
+            rqp = self._responder_qp(qp)
+            if rqp is None or not rqp.rq:
+                status = CQEStatus.RNR
+            else:
+                recv = rqp.rq.popleft()
+                n = min(wqe.length, recv.length)
+                plan.append(("xfer", qp.local_peer, qp.remote_peer,
+                             wqe.local_addr, recv.local_addr, n))
+                if wqe.opcode is Opcode.SEND_INV and wqe.inv_rkey is not None:
+                    self.invalidate_mr(wqe.inv_rkey)
+                remote_cqe = (rqp, CQE(
+                    wr_id=recv.wr_id, qp_num=rqp.qp_num,
+                    opcode=Opcode.RECV, byte_len=n,
+                    imm=wqe.imm if wqe.opcode is Opcode.SEND_IMM else None))
+        else:
+            status = CQEStatus.INVALID_OPCODE
+
+        completions.append((qp, CQE(
+            wr_id=wqe.wr_id, qp_num=qp.qp_num, opcode=wqe.opcode,
+            status=status or CQEStatus.SUCCESS,
+            byte_len=wqe.length if status is None else 0,
+            imm=wqe.imm), remote_cqe))
 
     def _responder_qp(self, qp: QueuePair) -> Optional[QueuePair]:
         """The paired QP on the remote peer (same connection) — indexed
@@ -218,7 +288,8 @@ class RDMAEngine:
         return np.asarray(self.transport.host_read(peer, addr, length))
 
     def sync_host_to_dev(self, peer: int, addr: int, length: int) -> None:
-        """Stage a host_mem region into dev_mem (the QDMA H2C path)."""
+        """Stage a host_mem region into dev_mem (the QDMA H2C path —
+        descriptor-ized: pow2 chunk buckets, no per-length recompile)."""
         self.transport.host_write(
             peer, addr, self.host_mem[peer][addr:addr + length])
 

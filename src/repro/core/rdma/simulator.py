@@ -20,9 +20,9 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional, Sequence
 
-from repro.core.rdma.cost_model import PAPER_HW, PaperHW
+from repro.core.rdma.cost_model import PAPER_HW, PaperHW, jain_fairness_index
 
 
 @dataclass(frozen=True)
@@ -140,13 +140,100 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
                    + o["response_start"])
     hw_time = (dispatches * (startup + hw.wire_prop + o["completion"])
                + wqes * (ser + o["fetch_next"]))
+    # QDMA staging terms: each host_write pays the staging dispatch, each
+    # new chunk bucket a compile (the descriptor-ized path's whole win).
+    qdma_writes = xstats.get("qdma_writes", 0)
+    qdma_compiles = xstats.get("qdma_compiles", 0)
     exec_time = (xstats.get("compiles", 0) * xla.compile_s
-                 + dispatches * xla.dispatch_s)
-    return {
+                 + dispatches * xla.dispatch_s
+                 + qdma_compiles * xla.compile_s
+                 + qdma_writes * xla.staging_dispatch_s)
+    out = {
         "hw_predicted_s": hw_time,
         "executor_predicted_s": exec_time,
         "wqes_per_doorbell": wqes / dispatches if dispatches else 0.0,
         "coalesced_wqes": float(coalesced),
+        "interleaved_batches": float(xstats.get("interleaved_batches", 0)),
+        "qdma_writes": float(qdma_writes),
+        "qdma_compiles": float(qdma_compiles),
+    }
+    # Fairness term: engine.stats carries the per-QP service ledger.
+    qp_service = stats.get("qp_service")
+    if qp_service:
+        out["service_jain_index"] = jain_fairness_index(qp_service.values())
+    return out
+
+
+def doorbell_flush_time(served_wqes: int, payload: int,
+                        qp_location: str = "host_mem",
+                        hw: PaperHW = PAPER_HW) -> float:
+    """Model time (seconds) for ONE budgeted engine flush on the paper's
+    write path: fixed doorbell startup + completion poll per dispatch,
+    plus the steady-state interval per served WQE. Shared by
+    ``simulate_fair_schedule`` and ``bench_qp_fairness`` so the golden
+    traces and the benchmark can never disagree on the flush model."""
+    o = _request_overheads(hw, qp_location)
+    interval = payload / hw.line_rate + o["fetch_next"]
+    startup = o["doorbell"] + o["fetch_first"] + 0.5 * o["response_start"]
+    return startup + served_wqes * interval + hw.wire_prop + o["completion"]
+
+
+def simulate_fair_schedule(qp_depths: Sequence[int],
+                           scheduler: str = "rr",
+                           weights: Optional[Sequence[int]] = None,
+                           budget: int = 16, payload: int = 4096,
+                           qp_location: str = "host_mem",
+                           hw: PaperHW = PAPER_HW) -> Dict:
+    """Discrete-event model of the multi-QP doorbell scheduler.
+
+    ``qp_depths[i]`` WQEs are armed on QP *i*; the engine serves at most
+    ``budget`` WQEs per flush, picked by the *real* ``schedule_plan``
+    policy (rr / weighted-rr / fifo — the golden traces exercise exactly
+    the production scheduler, not a re-implementation). Each flush is one
+    doorbell batch on the paper's write path: fixed startup + completion
+    poll, plus the steady-state per-WQE interval for every served WQE.
+
+    Returns per-QP service shares of the first (fully contended) flush,
+    per-QP completion times, their spread, Jain's fairness index of the
+    first flush, and the flush count — the quantities the fairness golden
+    traces pin.
+    """
+    from repro.core.rdma.doorbell import schedule_plan
+
+    if budget <= 0:
+        raise ValueError(f"budget must be positive, got {budget}")
+    n = len(qp_depths)
+    wmap = ({i: int(w) for i, w in enumerate(weights)} if weights else {})
+    remaining = [int(d) for d in qp_depths]
+    completion = [0.0] * n
+    first_flush_counts: Optional[List[int]] = None
+    t, flushes = 0.0, 0
+    while any(remaining):
+        windows = [(i, tuple(range(remaining[i])))
+                   for i in range(n) if remaining[i]]
+        _, counts = schedule_plan(windows, scheduler=scheduler,
+                                  weights=wmap, budget=budget)
+        served = sum(counts.values())
+        flushes += 1
+        if first_flush_counts is None:
+            first_flush_counts = [counts.get(i, 0) for i in range(n)]
+        t += doorbell_flush_time(served, payload, qp_location, hw)
+        for i, c in counts.items():
+            if c:
+                remaining[i] -= c
+                if remaining[i] == 0:
+                    completion[i] = t
+
+    if first_flush_counts is None:      # nothing to schedule at all
+        first_flush_counts = [0] * n
+    served1 = max(1, sum(first_flush_counts))
+    return {
+        "first_flush_shares": [c / served1 for c in first_flush_counts],
+        "completion_us": [c * 1e6 for c in completion],
+        "completion_spread_us": (max(completion) - min(completion)) * 1e6,
+        "makespan_us": t * 1e6,
+        "jain_index": jain_fairness_index(first_flush_counts),
+        "flushes": flushes,
     }
 
 
@@ -173,11 +260,18 @@ def run_testcase(path_or_dict) -> Dict:
 
     Testcase schema::
 
-      {"name": str, "op": "read"|"write"|"dma"|"host_access",
+      {"name": str, "op": "read"|"write"|"dma"|"host_access"
+                          |"fair_schedule",
        "payload": int, "batch": int, "qp_location": "host_mem"|"dev_mem",
        "golden": {"throughput_gbps": float | null,
                   "latency_us": float | null,
                   "rtol": float}}
+
+    ``fair_schedule`` testcases (the multi-QP scheduler golden traces)
+    instead carry ``qp_depths`` (list), optional ``weights`` (list),
+    ``scheduler`` ("rr"|"fifo") and ``budget``, and may pin any produced
+    metric in ``golden`` — scalars with relative tolerance, lists
+    (e.g. ``first_flush_shares``) elementwise, ints exactly.
     """
     tc = (json.load(open(path_or_dict)) if isinstance(path_or_dict, str)
           else path_or_dict)
@@ -198,15 +292,33 @@ def run_testcase(path_or_dict) -> Dict:
         out["latency_us"] = simulate_host_access(tc["payload"]) * 1e6
         out["throughput_gbps"] = tc["payload"] * 8 / (
             simulate_host_access(tc["payload"]) * 1e9)
+    elif op == "fair_schedule":
+        r = simulate_fair_schedule(
+            tc["qp_depths"], scheduler=tc.get("scheduler", "rr"),
+            weights=tc.get("weights"), budget=tc.get("budget", 16),
+            payload=tc.get("payload", 4096),
+            qp_location=tc.get("qp_location", "host_mem"))
+        out.update(r)
+        out["latency_us"] = r["makespan_us"]
     else:
         raise ValueError(op)
 
-    for key in ("throughput_gbps", "latency_us"):
-        want = golden.get(key)
-        if want is None:
+    def _close(got, want):
+        if isinstance(want, int) and not isinstance(want, bool):
+            return got == want
+        return abs(got - want) <= rtol * max(abs(want), 1e-12)
+
+    for key, want in golden.items():
+        if key == "rtol" or want is None:
             continue
-        got = out[key]
-        ok = abs(got - want) <= rtol * abs(want)
+        got = out.get(key)
+        if got is None:                 # typo'd / op-mismatched golden key
+            ok = False
+        elif isinstance(want, list):
+            ok = (isinstance(got, list) and len(got) == len(want)
+                  and all(_close(g, w) for g, w in zip(got, want)))
+        else:
+            ok = _close(got, want)
         out["checks"].append((key, want, got, ok))
         out["pass"] &= ok
     return out

@@ -25,11 +25,19 @@ seed executor (addresses baked in as a static jit argument, one recompile
 per distinct plan) is kept as ``execute_batch_static`` — the reference
 for parity tests and the baseline for ``bench_transport_compile``.
 
+The QDMA staging path (``host_write`` / ``sync_host_to_dev`` — the
+paper's host<->dev_mem H2C DMA) is descriptor-ized the same way: data is
+padded into a pow2 **chunk-bucketed** staging row and scattered by one
+pre-compiled program per bucket, with ``(peer, addr, length)`` riding as
+an int32 descriptor operand — varying data lengths stop recompiling.
+The seed per-length path is kept as ``host_write_static``.
+
 One-sided semantics are preserved: the responder's "CPU" (host python)
 never participates — only the collective program touches its buffer row.
 Both transports expose a ``stats`` dict (dispatches, wqes, cache hits and
-misses, compiles, coalesced WQEs) that the engine threads into its own
-stats and the simulator's cost model reads via ``predict_from_stats``.
+misses, compiles, coalesced WQEs, interleaved multi-QP batches, and the
+``qdma_*`` staging counters) that the engine threads into its own stats
+and the simulator's cost model reads via ``predict_from_stats``.
 """
 from __future__ import annotations
 
@@ -96,7 +104,38 @@ def pack_descriptors(plan: Sequence[tuple], pool_size: int
 
 def _new_stats() -> dict:
     return {"dispatches": 0, "wqes": 0, "coalesced_wqes": 0,
-            "cache_hits": 0, "cache_misses": 0, "compiles": 0}
+            "cache_hits": 0, "cache_misses": 0, "compiles": 0,
+            # multi-QP scheduler: flushes whose descriptor table mixed
+            # WQEs from more than one QP (set by the engine).
+            "interleaved_batches": 0,
+            # QDMA staging path (host_write / sync_host_to_dev): chunk
+            # buckets first seen vs reused, plus total staged writes.
+            "qdma_writes": 0, "qdma_cache_hits": 0,
+            "qdma_cache_misses": 0, "qdma_compiles": 0}
+
+
+def pack_staging(data, addr: int, peer: int, pool_size: int, dtype
+                 ) -> Tuple[jax.Array, jax.Array, int]:
+    """Pack one host->device staging write into a pow2-chunk padded row
+    plus a ``(peer, addr, length)`` int32 descriptor — the QDMA analogue
+    of ``pack_descriptors``. The compiled executor shape depends only on
+    ``chunk``, so varying data lengths fold onto a handful of programs.
+
+    Overrunning writes raise: the seed path clamps the start address
+    (shifting the write) while the scatter path would drop lanes — both
+    silently corrupt, so the staging layer rejects them outright."""
+    data = np.asarray(data)
+    length = int(data.shape[0])
+    if addr < 0 or addr + length > pool_size:
+        raise ValueError(
+            f"host_write out of bounds: [{addr}, {addr + length}) "
+            f"vs pool of {pool_size}")
+    chunk = max(MIN_CHUNK_BUCKET, _next_pow2(max(1, length)))
+    chunk = min(chunk, _next_pow2(pool_size))
+    staged = np.zeros(chunk, dtype)
+    staged[:length] = data
+    desc = np.asarray([peer, addr, length], np.int32)
+    return jnp.asarray(staged), jnp.asarray(desc), chunk
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +161,20 @@ def _exec_descriptors_local(pool: jax.Array, desc: jax.Array,
         return pool.at[dst, sidx].set(vals, mode="drop")
 
     return jax.lax.fori_loop(0, desc.shape[0], step, pool)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def _exec_staging(pool: jax.Array, staged: jax.Array, desc: jax.Array,
+                  chunk: int) -> jax.Array:
+    """QDMA H2C executor: scatter a padded staging row into the pool.
+    ``desc = (peer, addr, length)`` rides as an operand; lanes past
+    ``length`` point one past the row end and are dropped — the compiled
+    shape depends only on ``chunk``."""
+    del chunk  # static: fixes staged.shape, keeps the cache key explicit
+    pool_size = pool.shape[1]
+    lane = jnp.arange(staged.shape[0], dtype=jnp.int32)
+    sidx = jnp.where(lane < desc[2], desc[1] + lane, pool_size)
+    return pool.at[desc[0], sidx].set(staged, mode="drop")
 
 
 def _make_ici_program(mesh: Mesh, axis: str):
@@ -224,6 +277,7 @@ class _TransportBase:
     def __init__(self):
         self.stats = _new_stats()
         self._seen_buckets = set()
+        self._seen_qdma_buckets = set()
 
     # Backwards-compatible counters (examples/tests read these).
     @property
@@ -243,6 +297,15 @@ class _TransportBase:
             self.stats["compiles"] += 1
         self.stats["dispatches"] += 1
         self.stats["wqes"] += n_wqes
+
+    def _account_qdma(self, chunk: int) -> None:
+        if chunk in self._seen_qdma_buckets:
+            self.stats["qdma_cache_hits"] += 1
+        else:
+            self._seen_qdma_buckets.add(chunk)
+            self.stats["qdma_cache_misses"] += 1
+            self.stats["qdma_compiles"] += 1
+        self.stats["qdma_writes"] += 1
 
 
 class LocalTransport(_TransportBase):
@@ -281,6 +344,18 @@ class LocalTransport(_TransportBase):
         return jax.device_get(self.pool[peer, addr:addr + length])
 
     def host_write(self, peer: int, addr: int, data) -> None:
+        """Descriptor-ized QDMA H2C: data is padded to a pow2 chunk bucket
+        and scattered by ``_exec_staging`` with (peer, addr, length) as
+        operands — new data *lengths* only recompile on a new bucket."""
+        staged, desc, chunk = pack_staging(
+            data, addr, peer, self.pool.shape[1], self.pool.dtype)
+        self.pool = _exec_staging(self.pool, staged, desc, chunk)
+        self._account_qdma(chunk)
+
+    def host_write_static(self, peer: int, addr: int, data) -> None:
+        """Seed QDMA path: data shape is the jit cache key (one XLA
+        compile per distinct length). Kept as the parity reference and
+        the baseline for the QDMA section of bench_transport_compile."""
         data = jnp.asarray(data, self.pool.dtype)
         self.pool = _host_write(self.pool, data, peer, addr)
 
@@ -323,6 +398,16 @@ class ICITransport(_TransportBase):
         return jax.device_get(self.pool[peer, addr:addr + length])
 
     def host_write(self, peer: int, addr: int, data) -> None:
+        """Descriptor-ized QDMA H2C over the sharded pool (see
+        ``LocalTransport.host_write``)."""
+        staged, desc, chunk = pack_staging(
+            data, addr, peer, self.pool.shape[1], self.pool.dtype)
+        with jax.set_mesh(self.mesh):
+            self.pool = _exec_staging(self.pool, staged, desc, chunk)
+        self._account_qdma(chunk)
+
+    def host_write_static(self, peer: int, addr: int, data) -> None:
+        """Seed QDMA path (recompiles per data length); parity reference."""
         data = jnp.asarray(data, self.pool.dtype)
         with jax.set_mesh(self.mesh):
             self.pool = _host_write(self.pool, data, peer, addr)
@@ -343,6 +428,17 @@ def descriptor_cache_size() -> int:
     """Process-wide compiled-program count of the local descriptor
     executor (benchmarks diff this across a workload)."""
     return _exec_descriptors_local._cache_size()
+
+
+def staging_cache_size() -> int:
+    """Process-wide compiled-program count of the QDMA staging executor
+    (shared by both transports; benchmarks diff this across a workload)."""
+    return _exec_staging._cache_size()
+
+
+def host_write_cache_size() -> int:
+    """Compiled-program count of the seed (per-length) host-write path."""
+    return _host_write._cache_size()
 
 
 @jax.jit

@@ -99,11 +99,18 @@ class QueuePair:
     holds only the not-yet-retired window ``[sq_cidx, sq_pidx)``, the RQ
     pops RECVs from the head in O(1), and the CQ drains from the head in
     O(polled) — no O(n) ``pop(0)``/slice anywhere on a completion path.
+
+    Ordering guarantee: WQEs of one QP execute (and complete — CQEs land
+    on the CQ) strictly in posting order, whatever the engine's multi-QP
+    scheduler interleaves *between* QPs. ``weight`` is the fair-scheduler
+    quantum: a weight-k QP is offered k WQEs per round-robin round when
+    several SQ windows contend for one flush.
     """
     qp_num: int
     local_peer: int
     remote_peer: int
     placement: Placement = Placement.DEV_MEM
+    weight: int = 1
     sq: Deque[WQE] = field(default_factory=deque)
     rq: Deque[WQE] = field(default_factory=deque)   # pre-posted RECVs
     cq: Deque[CQE] = field(default_factory=deque)
@@ -118,10 +125,20 @@ class QueuePair:
     def post_recv(self, wqe: WQE) -> None:
         self.rq.append(wqe)
 
-    def pending(self) -> list:
+    def pending(self, limit: Optional[int] = None) -> list:
         """WQEs covered by the doorbell but not yet executed (the head of
-        the SQ window; retired entries have already been popped)."""
-        return list(islice(self.sq, max(0, self.sq_doorbell - self.sq_cidx)))
+        the SQ window; retired entries have already been popped).
+        ``limit`` caps the snapshot — a budgeted flush can serve at most
+        that many, so it need not copy a deep window's tail."""
+        n = max(0, self.sq_doorbell - self.sq_cidx)
+        if limit is not None:
+            n = min(n, limit)
+        return list(islice(self.sq, n))
+
+    @property
+    def pending_count(self) -> int:
+        """Doorbell-covered, not-yet-executed WQEs — O(1)."""
+        return max(0, self.sq_doorbell - self.sq_cidx)
 
     def retire(self, n: int) -> None:
         """Consume ``n`` executed WQEs from the SQ head."""

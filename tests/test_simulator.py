@@ -7,8 +7,9 @@ import os
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.rdma.cost_model import PAPER_HW
+from repro.core.rdma.cost_model import PAPER_HW, jain_fairness_index
 from repro.core.rdma.simulator import (run_testcase, simulate_dma,
+                                       simulate_fair_schedule,
                                        simulate_host_access, simulate_rdma)
 
 TESTCASE_DIR = os.path.join(os.path.dirname(__file__), "testcases")
@@ -82,10 +83,68 @@ class TestSimulatorProperties:
         assert dev.total_time <= host.total_time + 1e-12
 
 
+class TestGoldenFairness:
+    """Golden-trace fairness: the checked-in fair_* testcases pin the
+    multi-QP scheduler's per-QP service shares and completion spreads
+    (the traces drive the production schedule_plan, not a model copy)."""
+
+    def _run(self, name):
+        out = run_testcase(os.path.join(TESTCASE_DIR, name))
+        assert out["pass"], f"{name}: {out['checks']}"
+        return out
+
+    def test_fair_2qp_interleave_trace(self):
+        out = self._run("fair_2qp_interleave.json")
+        # even split of the first contended flush, perfectly fair
+        assert out["first_flush_shares"] == [0.5, 0.5]
+        assert out["jain_index"] == 1.0
+        # the shallow QP completes in the very first flush
+        assert out["completion_us"][1] < out["completion_us"][0]
+
+    def test_fair_weighted_4qp_trace(self):
+        out = self._run("fair_weighted_4qp.json")
+        # weight-3 QP earns exactly half of the 12-WQE budget; the three
+        # weight-1 QPs split the rest evenly
+        shares = out["first_flush_shares"]
+        assert shares[0] == pytest.approx(0.5)
+        assert shares[1:] == pytest.approx([1 / 6] * 3)
+        assert out["jain_index"] == pytest.approx(
+            jain_fairness_index([6, 2, 2, 2]))
+
+    def test_rr_dominates_fifo_on_fairness(self):
+        """Same contention, scheduler flipped: FIFO starves the first
+        flush (one QP takes the whole budget) while RR splits it."""
+        depths, budget = [64, 8, 8, 8], 16
+        rr = simulate_fair_schedule(depths, "rr", budget=budget)
+        ff = simulate_fair_schedule(depths, "fifo", budget=budget)
+        assert min(ff["first_flush_shares"]) == 0.0      # starvation
+        assert min(rr["first_flush_shares"]) == pytest.approx(0.25)
+        assert rr["jain_index"] > ff["jain_index"]
+        # shallow QPs finish strictly earlier under RR
+        assert max(rr["completion_us"][1:]) < min(ff["completion_us"][1:])
+
+
+    def test_degenerate_inputs(self):
+        with pytest.raises(ValueError):
+            simulate_fair_schedule([4, 4], budget=0)
+        out = simulate_fair_schedule([0, 0])
+        assert out["flushes"] == 0
+        assert out["first_flush_shares"] == [0.0, 0.0]
+
+    def test_unknown_golden_key_fails_cleanly(self):
+        """A typo'd / op-mismatched golden key is a failed check, not a
+        KeyError aborting the run."""
+        out = run_testcase({"op": "fair_schedule", "qp_depths": [4, 4],
+                            "golden": {"throughput_gbps": 1.0,
+                                       "rtol": 0.1}})
+        assert not out["pass"]
+        assert out["checks"] == [("throughput_gbps", 1.0, None, False)]
+
+
 def test_json_testcases_regression():
     """run_testcase over the checked-in testcases (paper §V analogue)."""
     cases = sorted(glob.glob(os.path.join(TESTCASE_DIR, "*.json")))
-    assert len(cases) >= 6
+    assert len(cases) >= 8
     for path in cases:
         out = run_testcase(path)
         assert out["pass"], f"{path}: {out['checks']}"

@@ -1,0 +1,291 @@
+"""Transport conformance suite: property-based contracts for the
+multi-QP doorbell scheduler (`schedule_plan`), the coalescer, and the
+descriptor-ized QDMA staging path.
+
+The contracts:
+
+* scheduling is a *permutation* that preserves each QP's posting order
+  (prefix picks), honors the flush budget, and — under round-robin with
+  equal weights — never lets one backlogged QP starve another;
+* executing a scheduled (interleaved) plan through the descriptor
+  executor is byte-identical to the seed static executor on the same
+  order, for random QP mixes including overlapping address ranges;
+* CQE order within each QP equals posting order, whatever the scheduler
+  interleaves between QPs;
+* `host_write`/`sync_host_to_dev` with varying data lengths stay inside
+  the pow2 chunk-bucket compile budget and round-trip byte-identically
+  through `host_read` on both transports.
+"""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rdma import Opcode, RDMAEngine, WQE, schedule_plan
+from repro.core.rdma.doorbell import coalesce_plan
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+POOL = 64
+N_PEERS = 2
+
+# One transfer op: (src, dst, src_addr, dst_addr, length) over a small
+# pool, so overlapping source/destination ranges are common.
+_op = st.tuples(st.integers(0, N_PEERS - 1), st.integers(0, N_PEERS - 1),
+                st.integers(0, POOL - 9), st.integers(0, POOL - 9),
+                st.integers(1, 8))
+_window = st.lists(_op, min_size=0, max_size=8)
+_windows = st.lists(_window, min_size=1, max_size=5)
+_scheduler = st.sampled_from(["rr", "fifo"])
+
+
+def _entries(ops):
+    return [("xfer", s, d, sa, da, ln) for (s, d, sa, da, ln) in ops]
+
+
+def _transport_pair(seed):
+    import jax.numpy as jnp
+    from repro.core.rdma.transport import make_transport
+    rng = np.random.default_rng(seed)
+    init = rng.standard_normal((N_PEERS, POOL)).astype(np.float32)
+    a = make_transport(N_PEERS, POOL)
+    b = make_transport(N_PEERS, POOL)
+    a.pool = jnp.asarray(init)
+    b.pool = jnp.asarray(init)
+    return a, b
+
+
+class TestSchedulePlanContract:
+    @settings(max_examples=60, deadline=None)
+    @given(windows=_windows, scheduler=_scheduler,
+           budget=st.integers(0, 30), use_budget=st.booleans())
+    def test_prefix_permutation_and_budget(self, windows, scheduler,
+                                           budget, use_budget):
+        wins = [(i, ops) for i, ops in enumerate(windows)]
+        merged, counts = schedule_plan(
+            wins, scheduler=scheduler,
+            budget=budget if use_budget else None)
+        total = sum(len(w) for w in windows)
+        cap = min(budget, total) if use_budget else total
+        assert len(merged) == sum(counts.values()) == cap
+        for qid, ops in wins:
+            picks = [e for q, e in merged if q == qid]
+            # prefix of the window, in posting order
+            assert picks == list(ops[:counts[qid]])
+
+    @settings(max_examples=60, deadline=None)
+    @given(windows=_windows)
+    def test_fifo_without_budget_is_concatenation(self, windows):
+        wins = [(i, ops) for i, ops in enumerate(windows)]
+        merged, _ = schedule_plan(wins, scheduler="fifo")
+        assert merged == [(i, e) for i, ops in wins for e in ops]
+
+    @settings(max_examples=60, deadline=None)
+    @given(depths=st.lists(st.integers(1, 32), min_size=2, max_size=6),
+           budget=st.integers(2, 24))
+    def test_rr_no_starvation_with_equal_weights(self, depths, budget):
+        """Every QP deep enough to use its fair share gets at least the
+        floor of it — one deep SQ cannot starve the others."""
+        wins = [(i, tuple(range(d))) for i, d in enumerate(depths)]
+        _, counts = schedule_plan(wins, scheduler="rr", budget=budget)
+        fair = budget // len(depths)
+        for i, d in enumerate(depths):
+            assert counts[i] >= min(d, fair)
+
+    @settings(max_examples=40, deadline=None)
+    @given(depths=st.lists(st.integers(8, 32), min_size=2, max_size=4),
+           weights=st.lists(st.integers(1, 4), min_size=4, max_size=4))
+    def test_weighted_rr_tracks_weights(self, depths, weights):
+        """With all windows backlogged, one full budget round splits in
+        weight proportion (each QP serves `weight` per cycle)."""
+        weights = weights[:len(depths)]
+        wsum = sum(weights)
+        wins = [(i, tuple(range(d))) for i, d in enumerate(depths)]
+        _, counts = schedule_plan(
+            wins, scheduler="rr",
+            weights={i: w for i, w in enumerate(weights)}, budget=wsum)
+        # depths >= 8 >= max weight sum per cycle, so nothing runs dry
+        assert [counts[i] for i in range(len(depths))] == weights
+
+
+class TestScheduledExecutionParity:
+    @settings(max_examples=12, deadline=None)
+    @given(windows=_windows, scheduler=_scheduler,
+           budget=st.integers(1, 20), seed=st.integers(0, 999))
+    def test_descriptor_matches_static_on_scheduled_order(
+            self, windows, scheduler, budget, seed):
+        """Random QP mixes with overlapping ranges: the interleaved plan
+        must execute byte-identically on both executors."""
+        wins = [(i, _entries(ops)) for i, ops in enumerate(windows)]
+        merged, _ = schedule_plan(wins, scheduler=scheduler, budget=budget)
+        plan = [e for _, e in merged]
+        a, b = _transport_pair(seed)
+        a.execute_batch(plan)
+        b.execute_batch_static(plan)
+        np.testing.assert_array_equal(np.asarray(a.pool),
+                                      np.asarray(b.pool))
+
+    @settings(max_examples=12, deadline=None)
+    @given(windows=_windows, seed=st.integers(0, 999))
+    def test_coalesced_schedule_matches_uncoalesced(self, windows, seed):
+        """coalesce_plan over a scheduled order never changes semantics
+        (overlap guard included) — on either executor."""
+        wins = [(i, _entries(ops)) for i, ops in enumerate(windows)]
+        merged, _ = schedule_plan(wins, scheduler="rr")
+        plan = [e for _, e in merged]
+        a, b = _transport_pair(seed)
+        a.execute_batch(coalesce_plan(plan))
+        b.execute_batch_static(plan)
+        np.testing.assert_array_equal(np.asarray(a.pool),
+                                      np.asarray(b.pool))
+
+
+class TestEngineCQEOrdering:
+    @settings(max_examples=10, deadline=None)
+    @given(depths=st.lists(st.integers(1, 10), min_size=1, max_size=4),
+           scheduler=_scheduler, budget=st.integers(1, 8),
+           weights=st.lists(st.integers(1, 3), min_size=4, max_size=4))
+    def test_per_qp_cqe_order_is_posting_order(self, depths, scheduler,
+                                               budget, weights):
+        """Concurrent deferred doorbells, budgeted flushes: every WQE
+        completes exactly once and each QP's CQEs land in posting order."""
+        eng = RDMAEngine(n_peers=2, pool_size=1024, scheduler=scheduler,
+                         flush_budget=budget)
+        mr = eng.register_mr(1, 0, 512)
+        eng.write_buffer(1, 0, np.arange(512, dtype=np.float32))
+        qps = [eng.create_qp(0, 1, weight=w)
+               for w in weights[:len(depths)]]
+        for q, (qp, depth) in enumerate(zip(qps, depths)):
+            for i in range(depth):
+                eng.post_send(qp, WQE(
+                    Opcode.READ, qp.qp_num, wr_id=1000 * q + i,
+                    local_addr=600 + 16 * q + i, remote_addr=16 * q + i,
+                    length=1, rkey=mr.rkey))
+            eng.ring_sq_doorbell(qp, defer=True)
+        first = eng.flush_doorbells()
+        # rr with budget >= one full round serves every backlogged QP
+        if scheduler == "rr" and budget >= sum(qp.weight for qp in qps):
+            assert all(first.get(qp.qp_num, 0) > 0 for qp in qps)
+        for _ in range(200):
+            if not any(qp.pending() for qp in qps):
+                break
+            eng.flush_doorbells()
+        assert not any(qp.pending() for qp in qps)
+        for q, (qp, depth) in enumerate(zip(qps, depths)):
+            wr_ids = [c.wr_id for c in eng.poll_cq(qp, 256)]
+            assert wr_ids == [1000 * q + i for i in range(depth)]
+
+    def test_rr_shares_within_2x_of_even_fifo_starves(self):
+        """The acceptance-criterion scenario: 4 QPs, one 8x deeper.
+        RR keeps every backlogged QP's first-flush share within 2x of
+        even; FIFO gives the deep QP the whole budget."""
+        depths, budget = [32, 4, 4, 4], 16
+        shares = {}
+        for scheduler in ("rr", "fifo"):
+            eng = RDMAEngine(n_peers=2, pool_size=1024,
+                             scheduler=scheduler, flush_budget=budget)
+            mr = eng.register_mr(1, 0, 512)
+            qps = [eng.create_qp(0, 1) for _ in depths]
+            for q, (qp, depth) in enumerate(zip(qps, depths)):
+                for i in range(depth):
+                    eng.post_send(qp, WQE(
+                        Opcode.READ, qp.qp_num, wr_id=i,
+                        local_addr=600 + q, remote_addr=q, length=1,
+                        rkey=mr.rkey))
+                eng.ring_sq_doorbell(qp, defer=True)
+            counts = eng.flush_doorbells()
+            shares[scheduler] = [counts.get(qp.qp_num, 0) for qp in qps]
+        even = 16 / 4
+        assert all(even / 2 <= c <= even * 2 for c in shares["rr"])
+        assert shares["fifo"] == [16, 0, 0, 0]
+
+
+class TestQDMAStaging:
+    # 7 distinct lengths spanning exactly two pow2 chunk buckets
+    LENGTHS = [17, 20, 25, 31, 70, 100, 127]
+
+    def test_seven_lengths_at_most_two_compiles_roundtrip(self):
+        from repro.core.rdma.transport import make_transport
+        t = make_transport(2, 256)
+        for i, ln in enumerate(self.LENGTHS):
+            data = np.arange(ln, dtype=np.float32) + 10 * i
+            t.host_write(i % 2, 2 * i, data)
+            np.testing.assert_array_equal(t.host_read(i % 2, 2 * i, ln),
+                                          data)
+        assert t.stats["qdma_compiles"] <= 2, t.stats
+        assert t.stats["qdma_cache_misses"] <= 2
+        assert t.stats["qdma_writes"] == len(self.LENGTHS)
+        assert (t.stats["qdma_cache_hits"]
+                == len(self.LENGTHS) - t.stats["qdma_cache_misses"])
+
+    def test_staged_matches_static_host_write(self):
+        """Descriptor-ized QDMA == the seed per-length path, including
+        overwrites at unaligned offsets."""
+        import jax.numpy as jnp
+        from repro.core.rdma.transport import make_transport
+        rng = np.random.default_rng(3)
+        init = rng.standard_normal((2, 256)).astype(np.float32)
+        a = make_transport(2, 256)
+        b = make_transport(2, 256)
+        a.pool = jnp.asarray(init)
+        b.pool = jnp.asarray(init)
+        for _ in range(25):
+            ln = int(rng.integers(1, 120))
+            peer = int(rng.integers(0, 2))
+            addr = int(rng.integers(0, 256 - ln))
+            data = rng.standard_normal(ln).astype(np.float32)
+            a.host_write(peer, addr, data)
+            b.host_write_static(peer, addr, data)
+        np.testing.assert_array_equal(np.asarray(a.pool),
+                                      np.asarray(b.pool))
+
+    def test_overrunning_host_write_raises(self):
+        """The staging layer rejects pool-overrunning writes outright —
+        the seed path would clamp-and-shift, the scatter path would drop
+        lanes; both silently corrupt, so neither is allowed in."""
+        from repro.core.rdma.transport import make_transport
+        t = make_transport(2, 64)
+        with pytest.raises(ValueError, match="out of bounds"):
+            t.host_write(0, 60, np.zeros(8, np.float32))
+        with pytest.raises(ValueError, match="out of bounds"):
+            t.host_write(0, -1, np.zeros(4, np.float32))
+        assert t.stats["qdma_writes"] == 0    # nothing was accounted
+
+    def test_sync_host_to_dev_uses_staging_buckets(self):
+        eng = RDMAEngine(n_peers=2, pool_size=512)
+        for i, ln in enumerate(self.LENGTHS):
+            eng.host_mem[0][i:i + ln] = np.arange(ln, dtype=np.float32)
+            eng.sync_host_to_dev(0, i, ln)
+            np.testing.assert_array_equal(
+                eng.read_buffer(0, i, ln), np.arange(ln, dtype=np.float32))
+        assert eng.stats["transport"]["qdma_compiles"] <= 2
+
+    def test_ici_transport_qdma_parity_and_cache(self):
+        """ICITransport (forced 4-device mesh): staged host_write round-
+        trips byte-identically and stays inside the chunk-bucket compile
+        budget."""
+        code = """
+import numpy as np
+import jax.numpy as jnp
+from repro.core.rdma.transport import ICITransport, make_transport
+ici = make_transport(4, 256)
+assert isinstance(ici, ICITransport), type(ici)
+lengths = [17, 20, 25, 31, 70, 100, 127]
+for i, ln in enumerate(lengths):
+    data = np.arange(ln, dtype=np.float32) + i
+    ici.host_write(i % 4, i, data)
+    np.testing.assert_array_equal(ici.host_read(i % 4, i, ln), data)
+assert ici.stats["qdma_compiles"] <= 2, ici.stats
+assert ici.stats["qdma_writes"] == len(lengths)
+print("ICI_QDMA_OK", ici.stats["qdma_compiles"])
+"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=560)
+        assert "ICI_QDMA_OK" in r.stdout, r.stdout + r.stderr
