@@ -12,9 +12,10 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_dma, bench_grad_buckets,
                             bench_host_latency, bench_kernels,
-                            bench_pipeline, bench_qp_fairness,
-                            bench_rdma_read, bench_rdma_write,
-                            bench_roofline, bench_transport_compile)
+                            bench_lc_offload, bench_pipeline,
+                            bench_qp_fairness, bench_rdma_read,
+                            bench_rdma_write, bench_roofline,
+                            bench_transport_compile)
 
     sections = [
         ("Fig9/10 RDMA read (single vs batch)", bench_rdma_read.run),
@@ -32,6 +33,9 @@ def main() -> None:
         ("multi-QP fair doorbell scheduling + QDMA staging",
          functools.partial(bench_qp_fairness.run,
                            out_json="BENCH_fairness.json")),
+        ("SecIV-C lookaside offload vs host staging",
+         functools.partial(bench_lc_offload.run,
+                           out_json="BENCH_lc_offload.json")),
         ("SecIV-C/D compute-block kernels", bench_kernels.run),
         ("pipeline-parallel schedule (scale-out)", bench_pipeline.run),
         ("Roofline table (from dry-run artifacts)", bench_roofline.run),

@@ -29,7 +29,9 @@ DATA_PEER, NIC_PEER = 0, 1
 def main():
     # ---- (1) system init + "connection" setup ---------------------------
     eng = RDMAEngine(n_peers=2, pool_size=4 * M * M + 1024)
-    lc = LookasideBlock(eng)    # compute blocks share the engine (paper §I)
+    # compute blocks share the engine (paper §I); the LC block rides the
+    # NIC peer and sees memory through an LCContext
+    lc = LookasideBlock(eng, peer=NIC_PEER)
     data_pool = BufferPool(eng, DATA_PEER)
     nic_pool = BufferPool(eng, NIC_PEER)
 
@@ -67,11 +69,11 @@ def main():
     print(f"(4)(5) {len(cqes)} read completions")
 
     # ---- (6) control message -> systolic-array kernel ----------------------
-    def systolic_mm_kernel(engine, a_addr, b_addr, c_addr, m):
-        x = engine.read_buffer(NIC_PEER, a_addr, m * m).reshape(m, m)
-        y = engine.read_buffer(NIC_PEER, b_addr, m * m).reshape(m, m)
+    def systolic_mm_kernel(ctx, a_addr, b_addr, c_addr, m):
+        x = ctx.load(a_addr, m * m).reshape(m, m)
+        y = ctx.load(b_addr, m * m).reshape(m, m)
         z = np.asarray(kops.matmul(jnp.asarray(x), jnp.asarray(y)))
-        engine.write_buffer(NIC_PEER, c_addr, z.reshape(-1))
+        ctx.store(c_addr, z.reshape(-1))
         return c_addr
 
     lc.register(1, systolic_mm_kernel, "systolic_mm")

@@ -93,6 +93,54 @@ def main():
           f"service={eng.stats['qp_service']}")
     eng.scheduler, eng.flush_budget = "rr", None
 
+    # -- LOOKASIDE OFFLOAD: one host QP + one LC kernel share a flush ------
+    # The compute blocks are CLIENTS of the same engine (paper §I): the
+    # registered systolic_mm kernel RDMA-reads A,B from the server,
+    # computes on the NIC, and RDMA-writes C back — its WQEs ride the
+    # same descriptor tables as the host QP's verbs traffic, scheduled
+    # by deficit round-robin under a budget.
+    import jax.numpy as jnp
+
+    from repro.core.lookaside import ControlMsg, LookasideBlock
+    from repro.kernels.lc_offload import MM_WORKLOAD, register_default_kernels
+    from repro.kernels.ref import ref_matmul
+
+    eng.scheduler, eng.flush_budget = "drr", 8
+    blk = LookasideBlock(eng, peer=client, scratch_base=6144)
+    register_default_kernels(blk)
+    blk.eager_writeback = False       # StatusMsg rides the write-back CQE
+
+    host_qp = eng.create_qp(client, server)
+    for i in range(6):                # concurrent host verbs traffic
+        eng.post_send(host_qp, WQE(Opcode.READ, host_qp.qp_num, 700 + i,
+                                   local_addr=5000 + i, remote_addr=i,
+                                   length=1, rkey=mr.rkey))
+    eng.ring_sq_doorbell(host_qp, defer=True)      # armed, not flushed
+
+    i0 = eng.stats["transport"]["interleaved_batches"]
+    m = 8
+    blk.dispatch(ControlMsg(MM_WORKLOAD,
+                            (server, mr.rkey, 0, 64, 2048, m, m, m),
+                            tag=42))
+    print(f"LC mm  : kernel done, status deferred "
+          f"(poll={blk.poll(MM_WORKLOAD)}) — write-back CQE pending")
+    eng.flush_doorbells()             # host-driven flush completes it
+    st = blk.poll(MM_WORKLOAD)
+    A = eng.read_buffer(server, 0, m * m).reshape(m, m)
+    B = eng.read_buffer(server, 64, m * m).reshape(m, m)
+    C = eng.read_buffer(server, 2048, m * m).reshape(m, m)
+    err = float(np.abs(
+        C - np.asarray(ref_matmul(jnp.asarray(A), jnp.asarray(B)))).max())
+    while host_qp.pending():
+        eng.flush_doorbells()
+    print(f"LC mm  : ok={st.ok} tag={st.tag} |C-A@B|={err:.1e}; "
+          f"{eng.stats['transport']['interleaved_batches'] - i0} "
+          f"interleaved flush(es), lc_service="
+          f"{eng.stats['lc_service']}, host got "
+          f"{len(eng.poll_cq(host_qp, 64))} CQEs alongside")
+    assert st.ok and err == 0.0
+    eng.scheduler, eng.flush_budget = "rr", None
+
     # -- host_mem vs dev_mem placement (the -l flag) -----------------------
     eng.write_buffer(client, 0, np.ones(8, np.float32),
                      Placement.HOST_MEM)

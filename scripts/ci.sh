@@ -8,7 +8,11 @@
 #     regression — the exact failure mode the descriptor-driven
 #     transport exists to prevent), or
 #   * the fairness benchmark's acceptance asserts fail (rr shares within
-#     2x of even, fifo starvation baseline, QDMA >=5x fewer compiles).
+#     2x of even, fifo starvation baseline, QDMA >=5x fewer compiles), or
+#   * the lookaside-offload benchmark's acceptance asserts fail (2x
+#     bytes-moved ratio, host Jain >= 0.9 while an LC kernel streams,
+#     interleaved descriptor tables) or its smoke run records more
+#     descriptor/QDMA compiles than the committed BENCH_lc_offload.json.
 #
 # Usage: scripts/ci.sh
 set -euo pipefail
@@ -24,13 +28,16 @@ import json
 import sys
 
 sys.path.insert(0, ".")
-from benchmarks import bench_qp_fairness, bench_transport_compile
+from benchmarks import (bench_lc_offload, bench_qp_fairness,
+                        bench_transport_compile)
 
 # Smoke mode: fewer doorbells, same compile-count semantics. CI artifacts
 # are written next to (never over) the committed baselines.
 rec = bench_transport_compile.run(verbose=True, n_doorbells=20,
                                   out_json="BENCH_transport.ci.json")
 bench_qp_fairness.run(verbose=True, out_json="BENCH_fairness.ci.json")
+rec_lc = bench_lc_offload.run(verbose=True, smoke=True,
+                              out_json="BENCH_lc_offload.ci.json")
 
 baseline = json.load(open("BENCH_transport.json"))
 regressions = []
@@ -38,11 +45,18 @@ for key in ("descriptor_compiles", "qdma_staged_compiles"):
     base = baseline.get(key)
     if base is not None and rec[key] > base:
         regressions.append(f"{key}: {rec[key]} > baseline {base}")
+lc_baseline = json.load(open("BENCH_lc_offload.json"))
+for key in ("descriptor_compiles", "qdma_compiles"):
+    base = lc_baseline.get(key)
+    if base is not None and rec_lc[key] > base:
+        regressions.append(f"lc_{key}: {rec_lc[key]} > baseline {base}")
 if regressions:
-    sys.exit("XLA-compile regression vs BENCH_transport.json: "
+    sys.exit("XLA-compile regression vs committed baselines: "
              + "; ".join(regressions))
 print("compile counts within baseline:",
-      {k: rec[k] for k in ("descriptor_compiles", "qdma_staged_compiles")})
+      {k: rec[k] for k in ("descriptor_compiles", "qdma_staged_compiles")},
+      {f"lc_{k}": rec_lc[k]
+       for k in ("descriptor_compiles", "qdma_compiles")})
 EOF
 
 echo "CI OK"

@@ -1,2 +1,4 @@
 from repro.core.lookaside.control import ControlMsg, FIFO, StatusMsg  # noqa: F401
-from repro.core.lookaside.registry import LCKernel, LookasideBlock  # noqa: F401
+from repro.core.lookaside.registry import (  # noqa: F401
+    LCContext, LCKernel, LookasideBlock,
+)

@@ -24,25 +24,40 @@ class ControlMsg:
 
 @dataclass(frozen=True)
 class StatusMsg:
-    """One completion (the status-FIFO entry)."""
+    """One completion (the status-FIFO entry). ``retryable=True`` marks a
+    transient not-ok status (control-FIFO backpressure): the host should
+    drain completions and re-dispatch the same ControlMsg."""
     workload_id: int
     tag: int
     ok: bool
     result_addr: Optional[int] = None
     detail: str = ""
+    retryable: bool = False
 
 
 class FIFO:
-    """Bounded FIFO with not-empty signal (maps to the RTL FIFOs)."""
+    """Bounded FIFO with not-empty signal (maps to the RTL FIFOs).
+
+    ``try_push`` is the hardware-faithful entry point: a full FIFO
+    asserts backpressure (returns False) instead of raising — the
+    LookasideBlock turns that into a retryable ``StatusMsg(ok=False)``
+    rather than letting a RuntimeError unwind the engine loop. ``push``
+    keeps the raising behavior for callers that treat overflow as a bug.
+    """
 
     def __init__(self, depth: int = 64):
         self.depth = depth
         self._q: collections.deque = collections.deque()
 
-    def push(self, item) -> None:
+    def try_push(self, item) -> bool:
         if len(self._q) >= self.depth:
-            raise RuntimeError("FIFO full (backpressure)")
+            return False
         self._q.append(item)
+        return True
+
+    def push(self, item) -> None:
+        if not self.try_push(item):
+            raise RuntimeError("FIFO full (backpressure)")
 
     def pop(self):
         return self._q.popleft() if self._q else None

@@ -3,47 +3,196 @@
 The block "has the capacity to accommodate multiple kernels"; each kernel
 is a JAX-callable with a control FIFO and a status FIFO. The host enqueues
 ``ControlMsg``s (compute control API); when the control FIFO is not empty
-the kernel retrieves a message, accesses memory through the RDMA engine's
-buffer pool (its AXI4 data interface), executes, and pushes a StatusMsg.
+the kernel retrieves a message, accesses memory through the RDMA engine,
+executes, and pushes a StatusMsg.
 
-Completion is surfaced either by *polling* (``poll``) or an *interrupt*
-(callback registered per kernel) — both modes of §III-B.1.
+Kernels are FIRST-CLASS CLIENTS of the shared offload engine (the paper's
+key flexibility point, §I/§III-B): each ``LCKernel`` owns its own QP(s)
+(tagged ``lc=True``), its remote memory accesses are lowered to READ/WRITE
+WQEs that land in the SAME descriptor tables as concurrent host verbs
+traffic (ring deferred, flush shared — visible in the engine's
+``interleaved_batches`` / ``qp_service`` / ``lc_service`` stats), and its
+``StatusMsg`` completion is driven off the write-back CQEs:
+
+  * poll mode       — ``block.poll(workload_id)`` drains the status FIFO,
+  * interrupt mode  — a handler registered per kernel fires on completion,
+  * and the StatusMsg itself is only pushed once every WQE of the
+    invocation has completed (``LCContext.commit(wait=False)`` leaves the
+    write-back armed: the status then appears when a later — possibly
+    host-driven — ``flush_doorbells`` executes it, exactly the shared-
+    engine contention the conformance suite pins).
+
+Kernel functions take an ``LCContext`` (not the raw engine): ``ctx`` is
+the kernel's AXI view of the world — verbs on its own QPs for remote
+memory, ``load``/``store`` for local dev_mem scratch.
+
+Control-FIFO overflow is *backpressure*, not a crash: ``dispatch``
+returns a retryable ``StatusMsg(ok=False)`` instead of raising through
+the engine loop.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Optional
+import itertools
+from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.lookaside.control import ControlMsg, FIFO, StatusMsg
+from repro.core.rdma.verbs import CQE, CQEStatus, Opcode, WQE
 
 
 class LCKernel:
     """One registered lookaside kernel.
 
-    ``fn(engine, *args) -> Optional[int]`` reads/writes engine buffers and
-    returns an optional result address.
+    ``fn(ctx, *args) -> Optional[int]`` accesses memory through an
+    ``LCContext`` and returns an optional result address. ``weight`` is
+    the fair-scheduler quantum of the kernel's QPs (how hard this kernel
+    may lean on the shared engine per service round).
     """
 
-    def __init__(self, workload_id: int, fn: Callable, name: str = ""):
+    def __init__(self, workload_id: int, fn: Callable, name: str = "",
+                 weight: int = 1):
         self.workload_id = workload_id
         self.fn = fn
-        self.name = name or fn.__name__
+        self.name = name or getattr(fn, "__name__", "kernel")
+        self.weight = weight
+        self.qps: Dict[int, object] = {}     # remote_peer -> QueuePair
         self.control_fifo = FIFO()
         self.status_fifo = FIFO()
         self.interrupt_handler: Optional[Callable[[StatusMsg], None]] = None
 
 
+class _Invocation:
+    """In-flight state of one ControlMsg: outstanding WQEs + outcome."""
+
+    __slots__ = ("kernel", "msg", "outstanding", "failures", "fn_done",
+                 "error", "result_addr", "finalized")
+
+    def __init__(self, kernel: LCKernel, msg: ControlMsg):
+        self.kernel = kernel
+        self.msg = msg
+        self.outstanding: Set[int] = set()   # wr_ids awaiting CQEs
+        self.failures: List[CQE] = []
+        self.fn_done = False
+        self.error: Optional[str] = None
+        self.result_addr: Optional[int] = None
+        self.finalized = False
+
+
+class LCContext:
+    """What an offloaded kernel sees while servicing one ControlMsg.
+
+    Remote memory is reached ONLY through verbs on the kernel's own QPs
+    (``read_remote`` / ``write_remote`` post WQEs; ``commit`` rings the
+    doorbells deferred and — with ``wait=True`` — drives shared engine
+    flushes until this invocation's CQEs land). Local dev_mem scratch is
+    the LC block's AXI4 data interface (``load`` / ``store`` / ``alloc``).
+    """
+
+    def __init__(self, block: "LookasideBlock", inv: _Invocation):
+        self._block = block
+        self._inv = inv
+        self.engine = block.engine
+        self.peer = block.peer
+        self._dirty: List[object] = []       # QPs with unrung WQEs
+
+    # -- remote memory: lowered to WQEs on the kernel's QPs ---------------
+    def qp(self, remote_peer: int):
+        return self._block._qp(self._inv.kernel, remote_peer)
+
+    def read_remote(self, remote_peer: int, rkey: int, remote_addr: int,
+                    local_addr: int, length: int) -> int:
+        """RDMA-READ ``length`` words of the remote peer's memory into
+        local scratch. Returns the wr_id."""
+        return self._post(Opcode.READ, remote_peer, rkey,
+                          local_addr, remote_addr, length)
+
+    def write_remote(self, remote_peer: int, rkey: int, local_addr: int,
+                     remote_addr: int, length: int) -> int:
+        """RDMA-WRITE local scratch back to the remote peer."""
+        return self._post(Opcode.WRITE, remote_peer, rkey,
+                          local_addr, remote_addr, length)
+
+    def _post(self, opcode: Opcode, remote_peer: int, rkey: int,
+              local_addr: int, remote_addr: int, length: int) -> int:
+        qp = self.qp(remote_peer)
+        wr_id = next(self._block._wr_ids)
+        self._inv.outstanding.add(wr_id)
+        self._block._wr[wr_id] = self._inv
+        self.engine.post_send(qp, WQE(
+            opcode, qp.qp_num, wr_id, local_addr=local_addr,
+            remote_addr=remote_addr, length=length, rkey=rkey))
+        if qp not in self._dirty:
+            self._dirty.append(qp)
+        return wr_id
+
+    def commit(self, wait: bool = True) -> None:
+        """Ring the doorbells of every QP with posted WQEs — DEFERRED, so
+        the next flush schedules them alongside any armed host windows
+        (one shared descriptor table). ``wait=True`` then flushes until
+        this invocation's outstanding CQEs have all landed; ``wait=False``
+        leaves them armed for whoever flushes next (CQE-driven async
+        completion)."""
+        for qp in self._dirty:
+            self.engine.ring_sq_doorbell(qp, defer=True)
+        self._dirty.clear()
+        if wait:
+            self._block._drain(self._inv)
+
+    @property
+    def failed(self) -> List[CQE]:
+        """CQEs of this invocation that completed with an error status."""
+        return list(self._inv.failures)
+
+    @property
+    def eager_writeback(self) -> bool:
+        """Block-level policy: should kernels wait on their write-back
+        commit (sync StatusMsg) or leave it armed (CQE-driven async)?"""
+        return self._block.eager_writeback
+
+    # -- local scratch: the AXI4 data interface ---------------------------
+    def alloc(self, length: int) -> int:
+        return self._block._alloc(length)
+
+    def load(self, addr: int, length: int):
+        return self.engine.read_buffer(self.peer, addr, length)
+
+    def store(self, addr: int, data) -> None:
+        self.engine.write_buffer(self.peer, addr, data)
+
+
 class LookasideBlock:
-    """The LC block: multiple kernels sharing the engine's memory fabric."""
+    """The LC block on one peer's NIC: kernels sharing the offload engine.
 
-    def __init__(self, engine):
+    ``peer`` is the mesh position the block (and its dev_mem scratch)
+    lives on; ``scratch_base``/``scratch_size`` bound the pool region the
+    per-invocation bump allocator hands out (recycled whenever no
+    invocation is in flight). ``eager_writeback`` is the default commit
+    mode kernels use for their result write-back.
+    """
+
+    def __init__(self, engine, peer: int = 0,
+                 scratch_base: Optional[int] = None,
+                 scratch_size: Optional[int] = None,
+                 eager_writeback: bool = True):
         self.engine = engine                 # shared RDMA engine (paper §I)
+        self.peer = peer
+        self.scratch_base = (engine.pool_size // 2 if scratch_base is None
+                             else scratch_base)
+        self.scratch_size = (engine.pool_size - self.scratch_base
+                             if scratch_size is None else scratch_size)
+        self.eager_writeback = eager_writeback
         self.kernels: Dict[int, LCKernel] = {}
+        self._cursor = self.scratch_base
+        self._inflight = 0
+        self._wr: Dict[int, _Invocation] = {}     # wr_id -> invocation
+        self._wr_ids = itertools.count(0x40000)
+        self.stats = {"dispatched": 0, "completed": 0, "errors": 0,
+                      "backpressure": 0, "status_drops": 0}
 
-    def register(self, workload_id: int, fn: Callable,
-                 name: str = "") -> LCKernel:
+    def register(self, workload_id: int, fn: Callable, name: str = "",
+                 weight: int = 1) -> LCKernel:
         if workload_id in self.kernels:
             raise KeyError(f"workload_id {workload_id} already registered")
-        k = LCKernel(workload_id, fn, name)
+        k = LCKernel(workload_id, fn, name, weight)
         self.kernels[workload_id] = k
         return k
 
@@ -52,26 +201,123 @@ class LookasideBlock:
         self.kernels[workload_id].interrupt_handler = handler
 
     # -- host-side compute-control API (libreconic Control API) -----------
-    def dispatch(self, msg: ControlMsg) -> None:
-        """Push a control message; the kernel executes when the FIFO is
-        serviced (here: immediately, single-threaded fabric model)."""
+    def dispatch(self, msg: ControlMsg,
+                 service: bool = True) -> Optional[StatusMsg]:
+        """Push a control message. Returns ``None`` when accepted, or a
+        *retryable* ``StatusMsg(ok=False)`` when the control FIFO asserts
+        backpressure (the host drains completions and re-dispatches —
+        nothing raises through the engine loop). ``service=False`` only
+        enqueues (the fabric is busy); call ``service()`` to run."""
         k = self.kernels[msg.workload_id]
-        k.control_fifo.push(msg)
-        self._service(k)
+        if not k.control_fifo.try_push(msg):
+            self.stats["backpressure"] += 1
+            return StatusMsg(k.workload_id, msg.tag, False,
+                             detail="EAGAIN: control FIFO full "
+                                    "(backpressure) — drain completions "
+                                    "and re-dispatch",
+                             retryable=True)
+        self.stats["dispatched"] += 1
+        if service:
+            self._service(k)
+        return None
+
+    def service(self, workload_id: int) -> None:
+        """Drain the control FIFO of one kernel (explicit fabric step for
+        messages enqueued with ``dispatch(..., service=False)``)."""
+        self._service(self.kernels[workload_id])
 
     def _service(self, k: LCKernel) -> None:
         while k.control_fifo.not_empty:
             msg = k.control_fifo.pop()
+            inv = _Invocation(k, msg)
+            self._inflight += 1
+            ctx = LCContext(self, inv)
             try:
-                result_addr = k.fn(self.engine, *msg.args)
-                status = StatusMsg(k.workload_id, msg.tag, True, result_addr)
-            except Exception as e:  # kernel fault -> error status
-                status = StatusMsg(k.workload_id, msg.tag, False,
-                                   detail=str(e))
-            k.status_fifo.push(status)
-            if k.interrupt_handler is not None:      # interrupt mode
-                while k.status_fifo.not_empty:
-                    k.interrupt_handler(k.status_fifo.pop())
+                inv.result_addr = k.fn(ctx, *msg.args)
+            except Exception as e:       # kernel fault -> error status
+                inv.error = str(e)
+                # ring + drain whatever the kernel posted before faulting
+                # so no WQE dangles half-armed in the SQ
+                ctx.commit(wait=True)
+            inv.fn_done = True
+            if not inv.outstanding:
+                self._finalize(inv)
+            # else: CQE-driven — _on_cqe finalizes when the last
+            # write-back lands (possibly in a later host-driven flush)
+
+    # -- CQE-driven completion --------------------------------------------
+    def _qp(self, kernel: LCKernel, remote_peer: int):
+        qp = kernel.qps.get(remote_peer)
+        if qp is None:
+            qp = self.engine.create_qp(self.peer, remote_peer,
+                                       weight=kernel.weight, lc=True)
+            self.engine.register_interrupt(qp, self._on_cqe)
+            kernel.qps[remote_peer] = qp
+        return qp
+
+    def _on_cqe(self, cqe: CQE) -> None:
+        """Engine interrupt on LC QPs: retire the WQE from its invocation;
+        the last one (with the kernel function done) pushes the
+        StatusMsg. Must not flush (runs inside flush_doorbells)."""
+        inv = self._wr.pop(cqe.wr_id, None)
+        if inv is None:
+            return
+        inv.outstanding.discard(cqe.wr_id)
+        if cqe.status is not CQEStatus.SUCCESS:
+            inv.failures.append(cqe)
+        if inv.fn_done and not inv.outstanding and not inv.finalized:
+            self._finalize(inv)
+
+    def _finalize(self, inv: _Invocation) -> None:
+        inv.finalized = True
+        self._inflight -= 1
+        if self._inflight == 0:          # recycle the bump allocator
+            self._cursor = self.scratch_base
+        k = inv.kernel
+        ok = inv.error is None and not inv.failures
+        detail = inv.error or ""
+        if inv.failures and not detail:
+            detail = (f"{len(inv.failures)} WQE(s) failed: "
+                      f"{inv.failures[0].status.value}")
+        status = StatusMsg(k.workload_id, inv.msg.tag, ok,
+                           inv.result_addr if ok else None, detail=detail)
+        if not k.status_fifo.try_push(status):
+            k.status_fifo.pop()          # bounded RTL FIFO: drop oldest
+            self.stats["status_drops"] += 1
+            k.status_fifo.try_push(status)
+        self.stats["completed"] += 1
+        if not ok:
+            self.stats["errors"] += 1
+        if k.interrupt_handler is not None:      # interrupt mode
+            while k.status_fifo.not_empty:
+                k.interrupt_handler(k.status_fifo.pop())
+
+    def _drain(self, inv: _Invocation) -> None:
+        """Flush the shared engine until this invocation's CQEs land.
+        Budgeted flushes may take several rounds; armed host windows get
+        served along the way (the engine is shared)."""
+        stalls = 0
+        while inv.outstanding:
+            counts = self.engine.flush_doorbells()
+            if any(counts.values()):
+                stalls = 0
+            else:
+                stalls += 1
+                if stalls > 8:
+                    raise RuntimeError(
+                        "LC drain stalled: outstanding WQEs were never "
+                        "scheduled (doorbell not armed?)")
+
+    # -- scratch allocator -------------------------------------------------
+    def _alloc(self, length: int) -> int:
+        if self._cursor + length > self.scratch_base + self.scratch_size:
+            raise MemoryError(
+                f"LC scratch exhausted: need {length}, "
+                f"[{self._cursor}, {self.scratch_base + self.scratch_size})"
+                " left")
+        addr = self._cursor
+        self._cursor += length
+        return addr
 
     def poll(self, workload_id: int) -> Optional[StatusMsg]:
         """Polling mode: host checks the status FIFO."""

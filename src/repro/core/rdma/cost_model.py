@@ -79,9 +79,27 @@ class XLACost:
     staging_dispatch_s: float = 20e-6
 
 
+@dataclass(frozen=True)
+class LCOffload:
+    """Lookaside-offload cost constants (paper §IV-C vs host staging).
+
+    The offloaded path RDMA-moves operands/results over the wire once and
+    computes on the NIC fabric; the host-staged path additionally crosses
+    PCIe twice (QDMA in + out) and computes on the host CPU. ``chunk_bytes``
+    is the WQE payload granularity the offload engine batches at.
+    """
+    # 16x16 MAC systolic array @ 250 MHz fabric clock, 2 flops per MAC —
+    # the paper's HLS lookaside matmul block.
+    systolic_flops: float = 2 * 16 * 16 * 250e6        # 1.28e11
+    # single-socket host GEMM (AVX-ish fp32) the staged baseline runs on
+    host_mm_flops: float = 2.5e11
+    chunk_bytes: int = 16384
+
+
 PAPER_HW = PaperHW()
 TPU_V5E = TpuV5e()
 XLA_COST = XLACost()
+LC_OFFLOAD = LCOffload()
 
 
 def jain_fairness_index(shares) -> float:

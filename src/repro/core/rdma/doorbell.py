@@ -71,7 +71,10 @@ def coalesce_plan(plan: Sequence[tuple]) -> List[tuple]:
 def schedule_plan(windows: Sequence[Tuple[int, Sequence]],
                   scheduler: str = "rr",
                   weights: Optional[Dict[int, int]] = None,
-                  budget: Optional[int] = None
+                  budget: Optional[int] = None,
+                  state: Optional[Dict] = None,
+                  promote_after: Optional[int] = None,
+                  backlog: Optional[Dict[int, int]] = None
                   ) -> Tuple[List[tuple], Dict[int, int]]:
     """Interleave per-QP doorbell windows into one execution order.
 
@@ -90,16 +93,41 @@ def schedule_plan(windows: Sequence[Tuple[int, Sequence]],
     * budget — at most ``budget`` total entries are taken (``None`` =
       drain everything), so one flush models a bounded engine service
       round,
-    * ``scheduler="rr"`` — round-robin over backlogged QPs, ``weights``
-      (default 1) entries per QP per round: no deep SQ can starve the
-      others; with equal weights every backlogged QP's share of a flush
-      is within one quantum of even,
+    * ``scheduler="rr"`` — stateless weighted round-robin over backlogged
+      QPs, ``weights`` (default 1) entries per QP per round: no deep SQ
+      can starve the others; with equal weights every backlogged QP's
+      share of a flush is within one quantum of even,
+    * ``scheduler="drr"`` — deficit round-robin with quantum carry-over:
+      each *visit* credits the QP its quantum into a deficit counter that
+      persists in ``state`` across flushes, so service truncated by the
+      budget is repaid later and long-run shares of continuously
+      backlogged QPs match ``weights`` exactly (ragged windows included).
+      A persistent rotor resumes the round where the budget cut it.
+      Deficits are carried, never minted: ``state`` tracks ``credited``
+      (quanta granted) and ``destroyed`` (credit dropped when a window
+      drains — an idle QP banks nothing), and the invariant
+      ``credited == served + deficits + destroyed`` holds per QP,
     * ``scheduler="fifo"`` — the PR-1 drain order: windows execute
       end-to-end in arrival order (the parity baseline; under a budget a
-      deep first window starves the rest).
+      deep first window starves the rest). With ``promote_after=T`` and a
+      persistent ``state``, age-based promotion bounds the starvation: a
+      backlogged QP that got zero service for T consecutive flushes is
+      served one quantum ahead of the drain (oldest first), so no QP
+      waits more than T flushes between services.
+
+    ``state`` is the cross-flush scheduler memory (deficits, rotor, ages,
+    conservation ledgers) owned by the caller — the engine threads its
+    own dict through every flush; ``None`` keeps the call stateless.
+
+    ``backlog`` gives each QP's TRUE pending depth when ``windows`` are
+    budget-truncated snapshots (the engine copies at most ``flush_budget``
+    WQEs per QP): drr must not mistake an exhausted snapshot for a
+    drained window, or it would destroy carried deficit / re-credit a
+    cut quantum and break the exact-share guarantee for weights
+    comparable to the budget. Defaults to the window lengths.
     """
-    if scheduler not in ("rr", "fifo"):
-        raise ValueError(f"scheduler must be rr|fifo, got {scheduler!r}")
+    if scheduler not in ("rr", "fifo", "drr"):
+        raise ValueError(f"scheduler must be rr|fifo|drr, got {scheduler!r}")
     ids = [qid for qid, _ in windows]
     if len(set(ids)) != len(ids):
         raise ValueError("duplicate qp_id in windows")
@@ -108,31 +136,105 @@ def schedule_plan(windows: Sequence[Tuple[int, Sequence]],
     remaining = total if budget is None else min(budget, total)
     merged: List[tuple] = []
     counts: Dict[int, int] = {qid: 0 for qid in ids}
+    lens = {qid: len(w) for qid, w in windows}
+    entries_by_id = dict(windows)
+    cursors = {qid: 0 for qid in ids}
+
+    def _quantum(qid):
+        return max(1, int(weights.get(qid, 1)))
+
+    def _take(qid, n):
+        nonlocal remaining
+        ents = entries_by_id[qid]
+        merged.extend((qid, ents[cursors[qid] + j]) for j in range(n))
+        cursors[qid] += n
+        counts[qid] += n
+        remaining -= n
 
     if scheduler == "fifo":
-        for qid, entries in windows:
-            take = min(len(entries), remaining)
-            merged.extend((qid, e) for e in entries[:take])
-            counts[qid] = take
-            remaining -= take
+        st = state if state is not None else {}
+        ages = st.setdefault("ages", {})
+        if promote_after is not None and remaining > 0:
+            starving = sorted(
+                (qid for qid in ids
+                 if lens[qid] and ages.get(qid, 0) >= promote_after),
+                key=lambda q: -ages.get(q, 0))          # oldest first
+            for qid in starving:
+                n = min(_quantum(qid), lens[qid], remaining)
+                if n:
+                    _take(qid, n)
+                if remaining <= 0:
+                    break
+        for qid, _ in windows:
+            n = min(lens[qid] - cursors[qid], remaining)
+            if n:
+                _take(qid, n)
             if remaining <= 0:
                 break
+        for qid in ids:                 # age only backlogged, unserved QPs
+            ages[qid] = 0 if counts[qid] or not lens[qid] \
+                else ages.get(qid, 0) + 1
         return merged, counts
 
-    cursors = [0] * len(windows)
+    if scheduler == "drr":
+        st = state if state is not None else {}
+        deficits = st.setdefault("deficits", {})
+        credited = st.setdefault("credited", {})
+        destroyed = st.setdefault("destroyed", {})
+        backlog = backlog or {}
+
+        def _left(qid):
+            """Truly-backlogged entries beyond the served cursor (the
+            snapshot may be shorter than the QP's real window)."""
+            return max(lens[qid], backlog.get(qid, 0)) - cursors[qid]
+
+        start = ids.index(st["rotor"]) if st.get("rotor") in ids else 0
+        rotation = ids[start:] + ids[:start]
+        # A budget cut mid-quantum pauses the round DURING this QP's
+        # service: the next flush resumes at it, spending the banked
+        # deficit WITHOUT a fresh credit (otherwise every flush would
+        # credit a full round while serving only part of one, minting
+        # unbounded deficit for whoever sits at the cut).
+        skip_credit = st.pop("no_credit", None)
+        progressed = True
+        while remaining > 0 and progressed:
+            progressed = False
+            for pos, qid in enumerate(rotation):
+                avail = lens[qid] - cursors[qid]
+                if avail <= 0:
+                    continue
+                if qid == skip_credit:
+                    skip_credit = None          # resume: no double credit
+                else:
+                    q = _quantum(qid)
+                    deficits[qid] = deficits.get(qid, 0) + q
+                    credited[qid] = credited.get(qid, 0) + q
+                n = min(deficits[qid], avail, remaining)
+                _take(qid, n)
+                deficits[qid] -= n
+                progressed = True
+                if _left(qid) == 0 and deficits[qid]:
+                    # window drained: idle QPs bank no credit (classic DRR)
+                    destroyed[qid] = destroyed.get(qid, 0) + deficits[qid]
+                    deficits[qid] = 0
+                if remaining <= 0:
+                    if deficits[qid] > 0 and _left(qid) > 0:
+                        st["rotor"] = qid       # cut mid-quantum: resume
+                        st["no_credit"] = qid
+                    else:
+                        st["rotor"] = rotation[(pos + 1) % len(rotation)]
+                    break
+        return merged, counts
+
+    # stateless weighted round-robin (the PR-2 default)
     progressed = True
     while remaining > 0 and progressed:
         progressed = False
-        for i, (qid, entries) in enumerate(windows):
-            quantum = max(1, int(weights.get(qid, 1)))
-            take = min(quantum, len(entries) - cursors[i], remaining)
-            if take <= 0:
+        for qid, _ in windows:
+            n = min(_quantum(qid), lens[qid] - cursors[qid], remaining)
+            if n <= 0:
                 continue
-            merged.extend(
-                (qid, entries[cursors[i] + k]) for k in range(take))
-            cursors[i] += take
-            counts[qid] += take
-            remaining -= take
+            _take(qid, n)
             progressed = True
             if remaining <= 0:
                 break

@@ -11,12 +11,15 @@ Faithfully reproduces the control flow of the paper's workflow (Fig 6):
      collective program on the ICI transport, and pushes CQEs
   5. host polls the CQ (or registers an "interrupt" callback)
 
-The engine is SHARED between host and compute blocks, so concurrent QPs
-contend for it: doorbells may be rung with ``defer=True`` and a single
-``flush_doorbells`` then *interleaves* the armed SQ windows (round-robin,
-weighted by per-QP ``weight``; ``scheduler="fifo"`` keeps the old
-whole-window drain order) under an optional per-flush WQE budget — one
-deep send queue cannot monopolize the engine (cf. ORCA/BALBOA fairness).
+The engine is SHARED between host and compute blocks (LookasideBlock
+kernels ride their own ``lc=True`` QPs through the very same path), so
+concurrent QPs contend for it: doorbells may be rung with ``defer=True``
+and a single ``flush_doorbells`` then *interleaves* the armed SQ windows
+(``scheduler="rr"`` weighted round-robin, ``"drr"`` deficit round-robin
+with quantum carry-over, ``"fifo"`` the old whole-window drain order —
+optionally bounded by ``promote_after`` age promotion) under an optional
+per-flush WQE budget — one deep send queue cannot monopolize the engine
+(cf. ORCA/BALBOA fairness).
 
 QPs/buffers carry a ``host_mem`` / ``dev_mem`` placement tag mirroring
 ``-l host_mem|dev_mem``; host_mem regions live in host RAM (numpy) and are
@@ -24,6 +27,7 @@ staged over the "PCIe" path, dev_mem regions live in the device pool.
 """
 from __future__ import annotations
 
+import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -41,18 +45,26 @@ class RDMAEngine:
 
     def __init__(self, n_peers: int = 2, pool_size: int = 1 << 16,
                  dtype=np.float32, mesh=None, coalesce: bool = True,
-                 scheduler: str = "rr", flush_budget: Optional[int] = None):
+                 scheduler: str = "rr", flush_budget: Optional[int] = None,
+                 promote_after: Optional[int] = None):
         self.n_peers = n_peers
         self.pool_size = pool_size
         self.coalesce = coalesce
         # Multi-QP doorbell scheduling: when several SQ windows are armed
         # for one flush, "rr" interleaves their WQEs round-robin (weighted
         # by QueuePair.weight) so one deep SQ cannot starve the others;
-        # "fifo" is the PR-1 drain order (whole windows, arrival order).
+        # "drr" is deficit round-robin with quantum carry-over (service a
+        # budget truncates is repaid in later flushes, so long-run shares
+        # match weights exactly); "fifo" is the PR-1 drain order (whole
+        # windows, arrival order), optionally bounded by age promotion
+        # (``promote_after`` flushes of zero service force one quantum).
         # ``flush_budget`` bounds WQEs executed per flush (None = drain);
         # leftovers stay armed for the next flush.
         self.scheduler = scheduler
         self.flush_budget = flush_budget
+        self.promote_after = promote_after
+        # cross-flush scheduler memory (drr deficits/rotor, fifo ages)
+        self._sched_state: Dict = {}
         self.transport = make_transport(n_peers, pool_size, dtype, mesh)
         self.mesh = self.transport.mesh
         self.mrs: Dict[int, MemoryRegion] = {}
@@ -68,10 +80,15 @@ class RDMAEngine:
         # "transport" aliases the live transport.stats dict (cache
         # hits/misses, compiles, coalesced WQEs, qdma_* staging counters)
         # — one stats surface. "qp_service" accumulates executed WQEs per
-        # qp_num (the fairness ledger the cost model reads).
+        # qp_num (the fairness ledger the cost model reads); "lc_service"
+        # is the subset on Lookaside-Compute-owned QPs (host-vs-compute
+        # contention on the shared engine); "qp_bytes" ledgers completed
+        # payload bytes per QP; "qp_latency_us" histograms doorbell-to-
+        # execution latency per QP in pow2-µs buckets.
         self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0,
                       "coalesced_wqes": 0, "flushes": 0,
-                      "qp_service": {},
+                      "qp_service": {}, "lc_service": {}, "lc_wqes": 0,
+                      "qp_bytes": {}, "qp_latency_us": {},
                       "transport": self.transport.stats}
 
     # ------------------------------------------------------------------ MRs
@@ -92,11 +109,13 @@ class RDMAEngine:
     # ------------------------------------------------------------------ QPs
     def create_qp(self, local_peer: int, remote_peer: int,
                   placement: Placement = Placement.DEV_MEM,
-                  weight: int = 1) -> QueuePair:
+                  weight: int = 1, lc: bool = False) -> QueuePair:
         """``weight`` is the fair-scheduler quantum: WQEs offered to this
-        QP per round-robin round when concurrent SQ windows share a flush."""
+        QP per round-robin round when concurrent SQ windows share a flush.
+        ``lc=True`` tags the QP as Lookaside-Compute-owned: its service is
+        additionally ledgered in ``stats["lc_service"]``."""
         qp = QueuePair(next_qp_num(), local_peer, remote_peer, placement,
-                       weight=weight)
+                       weight=weight, lc=lc)
         self.qps[qp.qp_num] = qp
         self._conn_index.setdefault((local_peer, remote_peer), []).append(qp)
         return qp
@@ -119,7 +138,12 @@ class RDMAEngine:
         windows into a single scheduled transport batch. A non-deferred
         ring flushes immediately (serving any other armed QPs too — the
         engine is shared, exactly the paper's contention point)."""
+        prev = max(qp.sq_doorbell, qp.sq_cidx)
         qp.sq_doorbell = qp.sq_pidx if pidx is None else pidx
+        newly = max(0, qp.sq_doorbell - prev)
+        if newly:                       # stamp for the latency histogram
+            now = time.perf_counter()
+            qp.arm_times.extend([now] * newly)
         if qp not in self._armed:
             self._armed.append(qp)
         self.stats["doorbells"] += 1
@@ -180,7 +204,12 @@ class RDMAEngine:
             [(qp.qp_num, wqes) for qp, wqes in windows],
             scheduler=self.scheduler,
             weights={qp.qp_num: qp.weight for qp, _ in windows},
-            budget=self.flush_budget)
+            budget=self.flush_budget,
+            state=self._sched_state,
+            promote_after=self.promote_after,
+            # snapshots are budget-truncated; drr needs the true depth to
+            # tell "window drained" from "snapshot exhausted"
+            backlog={qp.qp_num: qp.pending_count for qp, _ in windows})
         by_num = {qp.qp_num: qp for qp, _ in windows}
         plan: List[tuple] = []
         completions: List[tuple] = []   # (qp, CQE, remote) after transport
@@ -200,15 +229,31 @@ class RDMAEngine:
         served = [n for n in counts.values() if n]
         if len(served) > 1:
             self.transport.stats["interleaved_batches"] += 1
+        now = time.perf_counter()
         for qp_num, n in counts.items():
             if n:
-                by_num[qp_num].retire(n)
+                qp = by_num[qp_num]
+                hist = self.stats["qp_latency_us"].setdefault(qp_num, {})
+                for _ in range(n):
+                    t0 = qp.arm_times.popleft() if qp.arm_times else now
+                    us = (now - t0) * 1e6
+                    bucket = 1           # pow2-µs ceiling bucket
+                    while bucket < us:
+                        bucket <<= 1
+                    hist[bucket] = hist.get(bucket, 0) + 1
+                qp.retire(n)
                 self.stats["qp_service"][qp_num] = (
                     self.stats["qp_service"].get(qp_num, 0) + n)
+                if qp.lc:
+                    self.stats["lc_wqes"] += n
+                    self.stats["lc_service"][qp_num] = (
+                        self.stats["lc_service"].get(qp_num, 0) + n)
         self.stats["wqes"] += len(order)
         self.stats["flushes"] += 1
 
         for q, cqe, remote in completions:
+            self.stats["qp_bytes"][q.qp_num] = (
+                self.stats["qp_bytes"].get(q.qp_num, 0) + cqe.byte_len)
             self._complete(q, cqe)
             if remote is not None:
                 self._complete(*remote)

@@ -22,7 +22,8 @@ import json
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
-from repro.core.rdma.cost_model import PAPER_HW, PaperHW, jain_fairness_index
+from repro.core.rdma.cost_model import (LC_OFFLOAD, LCOffload, PAPER_HW,
+                                        PaperHW, jain_fairness_index)
 
 
 @dataclass(frozen=True)
@@ -161,6 +162,26 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
     qp_service = stats.get("qp_service")
     if qp_service:
         out["service_jain_index"] = jain_fairness_index(qp_service.values())
+        # LC-vs-host contention: Lookaside kernels are clients of the SAME
+        # engine, so every WQE they burn is a steady-state interval the
+        # host traffic waits out. lc_share is the engine fraction spent on
+        # compute-block QPs; lc_contention_s the absolute engine time;
+        # host_jain_index the fairness among host QPs only (an LC stream
+        # must not skew service between host QPs); host_slowdown_from_lc
+        # the service-rate dilution the host sees from sharing.
+        lc_service = stats.get("lc_service") or {}
+        if lc_service:
+            lc_wqes = sum(lc_service.values())
+            total = sum(qp_service.values())
+            host = {q: n for q, n in qp_service.items()
+                    if q not in lc_service}
+            out["lc_wqes"] = float(lc_wqes)
+            out["lc_share"] = lc_wqes / total if total else 0.0
+            out["lc_contention_s"] = lc_wqes * (ser + o["fetch_next"])
+            if host:
+                out["host_jain_index"] = jain_fairness_index(host.values())
+                out["host_slowdown_from_lc"] = (
+                    total / max(1, total - lc_wqes))
     return out
 
 
@@ -183,13 +204,16 @@ def simulate_fair_schedule(qp_depths: Sequence[int],
                            weights: Optional[Sequence[int]] = None,
                            budget: int = 16, payload: int = 4096,
                            qp_location: str = "host_mem",
-                           hw: PaperHW = PAPER_HW) -> Dict:
+                           hw: PaperHW = PAPER_HW,
+                           promote_after: Optional[int] = None) -> Dict:
     """Discrete-event model of the multi-QP doorbell scheduler.
 
     ``qp_depths[i]`` WQEs are armed on QP *i*; the engine serves at most
     ``budget`` WQEs per flush, picked by the *real* ``schedule_plan``
-    policy (rr / weighted-rr / fifo — the golden traces exercise exactly
-    the production scheduler, not a re-implementation). Each flush is one
+    policy (rr / weighted-rr / drr / fifo — the golden traces exercise
+    exactly the production scheduler, not a re-implementation; one
+    scheduler state dict persists across flushes, so drr deficits/rotor
+    and fifo ages behave exactly as in the engine). Each flush is one
     doorbell batch on the paper's write path: fixed startup + completion
     poll, plus the steady-state per-WQE interval for every served WQE.
 
@@ -208,11 +232,13 @@ def simulate_fair_schedule(qp_depths: Sequence[int],
     completion = [0.0] * n
     first_flush_counts: Optional[List[int]] = None
     t, flushes = 0.0, 0
+    state: Dict = {}                    # persists across flushes
     while any(remaining):
         windows = [(i, tuple(range(remaining[i])))
                    for i in range(n) if remaining[i]]
         _, counts = schedule_plan(windows, scheduler=scheduler,
-                                  weights=wmap, budget=budget)
+                                  weights=wmap, budget=budget,
+                                  state=state, promote_after=promote_after)
         served = sum(counts.values())
         flushes += 1
         if first_flush_counts is None:
@@ -234,6 +260,50 @@ def simulate_fair_schedule(qp_depths: Sequence[int],
         "makespan_us": t * 1e6,
         "jain_index": jain_fairness_index(first_flush_counts),
         "flushes": flushes,
+    }
+
+
+def simulate_lc_offload(m: int, k: int, n: int, elem_bytes: int = 4,
+                        qp_location: str = "dev_mem",
+                        hw: PaperHW = PAPER_HW,
+                        lc: LCOffload = LC_OFFLOAD) -> Dict[str, float]:
+    """Model one offloaded (M,K)x(K,N) matmul vs the host-staged baseline.
+
+    Offloaded (paper §IV-C): the Lookaside kernel RDMA-reads A and B from
+    the remote peer in ``chunk_bytes`` WQEs (one batched doorbell),
+    computes on the NIC's systolic array, and RDMA-writes C back — bytes
+    cross the wire once and never touch PCIe.
+
+    Host-staged: the same wire transfers land in dev_mem, but the host
+    must QDMA the operands over PCIe into host RAM, compute on the CPU,
+    and QDMA the result back before the write-back — every byte moves
+    twice (wire + PCIe), which is exactly the copy the shared-engine
+    design eliminates.
+    """
+    a_b, b_b, c_b = m * k * elem_bytes, k * n * elem_bytes, m * n * elem_bytes
+    chunk = lc.chunk_bytes
+    rd_wqes = max(1, -(-(a_b + b_b) // chunk))
+    wr_wqes = max(1, -(-c_b // chunk))
+    rd = simulate_rdma("read", chunk, rd_wqes, qp_location, hw).total_time
+    wr = simulate_rdma("write", chunk, wr_wqes, qp_location, hw).total_time
+    flops = 2.0 * m * k * n
+    offload = rd + flops / lc.systolic_flops + wr
+    dma_in = (a_b + b_b) / simulate_dma(a_b + b_b, hw=hw)
+    dma_out = c_b / simulate_dma(c_b, hw=hw)
+    host = rd + dma_in + flops / lc.host_mm_flops + dma_out + wr
+    wire = float(a_b + b_b + c_b)
+    return {
+        "offload_latency_us": offload * 1e6,
+        "host_latency_us": host * 1e6,
+        "offload_speedup": host / offload,
+        "wire_bytes": wire,
+        "offload_pcie_bytes": 0.0,
+        "host_pcie_bytes": wire,
+        "offload_bytes_moved": wire,
+        "host_bytes_moved": 2.0 * wire,
+        "bytes_moved_ratio": 2.0,
+        "read_wqes": float(rd_wqes),
+        "write_wqes": float(wr_wqes),
     }
 
 
@@ -261,7 +331,7 @@ def run_testcase(path_or_dict) -> Dict:
     Testcase schema::
 
       {"name": str, "op": "read"|"write"|"dma"|"host_access"
-                          |"fair_schedule",
+                          |"fair_schedule"|"lc_offload",
        "payload": int, "batch": int, "qp_location": "host_mem"|"dev_mem",
        "golden": {"throughput_gbps": float | null,
                   "latency_us": float | null,
@@ -269,9 +339,15 @@ def run_testcase(path_or_dict) -> Dict:
 
     ``fair_schedule`` testcases (the multi-QP scheduler golden traces)
     instead carry ``qp_depths`` (list), optional ``weights`` (list),
-    ``scheduler`` ("rr"|"fifo") and ``budget``, and may pin any produced
-    metric in ``golden`` — scalars with relative tolerance, lists
-    (e.g. ``first_flush_shares``) elementwise, ints exactly.
+    ``scheduler`` ("rr"|"drr"|"fifo"), ``budget`` and optional
+    ``promote_after``, and may pin any produced metric in ``golden`` —
+    scalars with relative tolerance, lists (e.g. ``first_flush_shares``)
+    elementwise, ints exactly.
+
+    ``lc_offload`` testcases carry ``m``/``k``/``n`` (matmul dims, plus
+    optional ``elem_bytes``/``qp_location``) and pin the offloaded-vs-
+    host-staged latency and bytes-moved metrics of
+    ``simulate_lc_offload``.
     """
     tc = (json.load(open(path_or_dict)) if isinstance(path_or_dict, str)
           else path_or_dict)
@@ -297,9 +373,17 @@ def run_testcase(path_or_dict) -> Dict:
             tc["qp_depths"], scheduler=tc.get("scheduler", "rr"),
             weights=tc.get("weights"), budget=tc.get("budget", 16),
             payload=tc.get("payload", 4096),
-            qp_location=tc.get("qp_location", "host_mem"))
+            qp_location=tc.get("qp_location", "host_mem"),
+            promote_after=tc.get("promote_after"))
         out.update(r)
         out["latency_us"] = r["makespan_us"]
+    elif op == "lc_offload":
+        r = simulate_lc_offload(
+            tc["m"], tc["k"], tc["n"],
+            elem_bytes=tc.get("elem_bytes", 4),
+            qp_location=tc.get("qp_location", "dev_mem"))
+        out.update(r)
+        out["latency_us"] = r["offload_latency_us"]
     else:
         raise ValueError(op)
 

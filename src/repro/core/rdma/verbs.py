@@ -104,13 +104,19 @@ class QueuePair:
     on the CQ) strictly in posting order, whatever the engine's multi-QP
     scheduler interleaves *between* QPs. ``weight`` is the fair-scheduler
     quantum: a weight-k QP is offered k WQEs per round-robin round when
-    several SQ windows contend for one flush.
+    several SQ windows contend for one flush. ``lc`` tags QPs owned by a
+    Lookaside Compute kernel — the engine accounts their service
+    separately (``stats["lc_service"]``) so host-vs-compute contention on
+    the shared engine is observable. ``arm_times`` stamps each
+    doorbell-covered WQE so the engine can histogram service latency.
     """
     qp_num: int
     local_peer: int
     remote_peer: int
     placement: Placement = Placement.DEV_MEM
     weight: int = 1
+    lc: bool = False
+    arm_times: Deque[float] = field(default_factory=deque)
     sq: Deque[WQE] = field(default_factory=deque)
     rq: Deque[WQE] = field(default_factory=deque)   # pre-posted RECVs
     cq: Deque[CQE] = field(default_factory=deque)

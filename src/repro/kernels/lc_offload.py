@@ -1,0 +1,96 @@
+"""Offloaded Lookaside kernels (paper §IV-C/§IV-D, run as engine clients).
+
+Each kernel here follows the paper's offload contract end to end:
+RDMA-read its operands from a *remote* peer over the shared engine (WQEs
+on the kernel's own QP, scheduled into the same descriptor tables as host
+verbs traffic), compute on the NIC — the Pallas kernels that map onto the
+TPU MXU/VPU — and RDMA-write the result back. The host only exchanges
+``ControlMsg``/``StatusMsg``; the data never crosses PCIe.
+
+ControlMsg argument conventions (all ints):
+
+  ``systolic_mm``   : (remote_peer, rkey, a_addr, b_addr, out_addr, m, k, n)
+  ``packet_parser`` : (remote_peer, rkey, pkts_addr, n_pkts, out_addr)
+
+Correctness contract: outputs are byte-identical to the host-side oracles
+in ``repro.kernels.ref`` on the same operand bytes (for the matmul, with
+a single K-block so the fp32 accumulation order matches the oracle's).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.packet_parser import HDR_BYTES, parse_packets
+from repro.kernels.systolic_mm import systolic_mm
+
+MM_WORKLOAD = 0x10
+PARSER_WORKLOAD = 0x11
+
+
+def _mm_blocks(m: int, k: int, n: int):
+    """MXU-aligned blocks for aligned shapes, whole-dim blocks otherwise
+    (interpret mode has no VMEM bound; k < 128 keeps one K step, so the
+    accumulation order — and hence the bytes — match ``ref_matmul``)."""
+    return (128 if m % 128 == 0 else m,
+            128 if n % 128 == 0 else n,
+            128 if k % 128 == 0 else k)
+
+
+def lc_systolic_mm(ctx, remote_peer, rkey, a_addr, b_addr, out_addr,
+                   m, k, n, *, interpret: bool = True):
+    """Offloaded (M,K)x(K,N) matmul: read A,B -> MXU systolic MM -> write C."""
+    a_loc, b_loc = ctx.alloc(m * k), ctx.alloc(k * n)
+    c_loc = ctx.alloc(m * n)
+    ctx.read_remote(remote_peer, rkey, a_addr, a_loc, m * k)
+    ctx.read_remote(remote_peer, rkey, b_addr, b_loc, k * n)
+    ctx.commit(wait=True)
+    if ctx.failed:
+        raise RuntimeError(
+            f"operand fetch failed: {ctx.failed[0].status.value}")
+    x = jnp.asarray(ctx.load(a_loc, m * k).reshape(m, k))
+    y = jnp.asarray(ctx.load(b_loc, k * n).reshape(k, n))
+    bm, bn, bk = _mm_blocks(m, k, n)
+    z = systolic_mm(x, y, block_m=bm, block_n=bn, block_k=bk,
+                    interpret=interpret)
+    ctx.store(c_loc, np.asarray(z, np.float32).reshape(-1))
+    ctx.write_remote(remote_peer, rkey, c_loc, out_addr, m * n)
+    ctx.commit(wait=ctx.eager_writeback)
+    return out_addr
+
+
+def lc_packet_parser(ctx, remote_peer, rkey, pkts_addr, n_pkts, out_addr,
+                     *, interpret: bool = True):
+    """Offloaded RoCEv2 classifier: read headers -> parse -> write meta.
+
+    Packets ride the float32 pool as byte values 0..255 (exact in fp32);
+    the (n_pkts, 4) int32 metadata rows write back the same way (every
+    field < 2^24, exact in fp32)."""
+    nbytes = n_pkts * HDR_BYTES
+    in_loc, out_loc = ctx.alloc(nbytes), ctx.alloc(n_pkts * 4)
+    ctx.read_remote(remote_peer, rkey, pkts_addr, in_loc, nbytes)
+    ctx.commit(wait=True)
+    if ctx.failed:
+        raise RuntimeError(
+            f"packet fetch failed: {ctx.failed[0].status.value}")
+    pkts = ctx.load(in_loc, nbytes).reshape(n_pkts, HDR_BYTES)
+    meta = parse_packets(jnp.asarray(pkts, jnp.uint8), block_p=n_pkts,
+                         interpret=interpret)
+    ctx.store(out_loc, np.asarray(meta, np.float32).reshape(-1))
+    ctx.write_remote(remote_peer, rkey, out_loc, out_addr, n_pkts * 4)
+    ctx.commit(wait=ctx.eager_writeback)
+    return out_addr
+
+
+def register_default_kernels(block, interpret: bool = True,
+                             weight: int = 1):
+    """Register the paper's two example offload kernels on a block."""
+    block.register(MM_WORKLOAD,
+                   functools.partial(lc_systolic_mm, interpret=interpret),
+                   "systolic_mm", weight=weight)
+    block.register(PARSER_WORKLOAD,
+                   functools.partial(lc_packet_parser, interpret=interpret),
+                   "packet_parser", weight=weight)
+    return block

@@ -124,6 +124,46 @@ class TestGoldenFairness:
         assert max(rr["completion_us"][1:]) < min(ff["completion_us"][1:])
 
 
+    def test_drr_trace_weight3_lc_stream_vs_hosts(self):
+        """lc_host_contention golden trace: a weight-3 LC kernel stream
+        (deep QP0) sharing the engine with three host QPs under drr — the
+        LC stream earns exactly half of each 12-WQE budget, the hosts
+        split the rest evenly, and nobody starves."""
+        out = self._run("lc_host_contention.json")
+        shares = out["first_flush_shares"]
+        assert shares[0] == pytest.approx(0.5)
+        assert shares[1:] == pytest.approx([1 / 6] * 3)
+        # host QPs all finish together, well before the deep LC stream
+        assert max(out["completion_us"][1:]) < out["completion_us"][0]
+        assert (out["completion_us"][1]
+                == pytest.approx(out["completion_us"][3]))
+
+    def test_drr_repays_budget_truncated_service(self):
+        """Carry-over in action: weights [5,1] with budget 3 truncate
+        QP0's 5-WQE quantum every flush. drr banks the cut and repays it,
+        holding the exact 5:1 service ratio throughout — with depths
+        60:12 (= 5:1) the two QPs drain in lockstep and finish in the
+        same flush. Plain rr never repays (the quantum is re-capped at 3
+        each flush), so the weight-5 QP monopolizes whole flushes and
+        drains strictly earlier while the weight-1 QP waits."""
+        drr = simulate_fair_schedule([60, 12], scheduler="drr",
+                                     weights=[5, 1], budget=3)
+        rr = simulate_fair_schedule([60, 12], scheduler="rr",
+                                    weights=[5, 1], budget=3)
+        assert drr["completion_us"][0] == pytest.approx(
+            drr["completion_us"][1])
+        assert drr["completion_us"][0] == pytest.approx(drr["makespan_us"])
+        assert rr["completion_us"][0] < rr["completion_us"][1]
+
+    def test_lc_offload_mm_trace(self):
+        """lc_offload_mm golden trace: the offloaded skinny matmul beats
+        host staging (data movement dominates) and moves exactly half
+        the bytes — the paper's whole argument for on-NIC compute."""
+        out = self._run("lc_offload_mm.json")
+        assert out["offload_speedup"] > 1.25
+        assert out["bytes_moved_ratio"] == pytest.approx(2.0)
+        assert out["offload_pcie_bytes"] == 0.0
+
     def test_degenerate_inputs(self):
         with pytest.raises(ValueError):
             simulate_fair_schedule([4, 4], budget=0)

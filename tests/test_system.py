@@ -135,7 +135,7 @@ def test_networked_matmul_workflow():
     """The paper's Fig 6 workflow end-to-end (see also examples/)."""
     from repro.kernels import ops as kops
     eng = RDMAEngine(n_peers=2, pool_size=8192)
-    lc = LookasideBlock(eng)
+    lc = LookasideBlock(eng, peer=1)     # the LC block rides peer 1's NIC
     m = 8
     data_pool = BufferPool(eng, 0)      # peer1 in the paper (holds data)
     smart_pool = BufferPool(eng, 1)     # peer2 = RecoNIC (computes)
@@ -164,11 +164,13 @@ def test_networked_matmul_workflow():
     assert len(eng.poll_cq(qp)) == 2
 
     # (6) control message -> systolic MM kernel  (7) completion
-    def mm_kernel(engine, a_addr, b_addr, c_addr, mm):
-        x = engine.read_buffer(1, a_addr, mm * mm).reshape(mm, mm)
-        y = engine.read_buffer(1, b_addr, mm * mm).reshape(mm, mm)
+    # (kernel sees an LCContext: local dev_mem via load/store, remote
+    # memory only through WQEs on its own QPs)
+    def mm_kernel(ctx, a_addr, b_addr, c_addr, mm):
+        x = ctx.load(a_addr, mm * mm).reshape(mm, mm)
+        y = ctx.load(b_addr, mm * mm).reshape(mm, mm)
         z = np.asarray(kops.matmul(jnp.asarray(x), jnp.asarray(y)))
-        engine.write_buffer(1, c_addr, z.reshape(-1))
+        ctx.store(c_addr, z.reshape(-1))
         return c_addr
 
     lc.register(7, mm_kernel, "systolic_mm")

@@ -112,6 +112,164 @@ class TestSchedulePlanContract:
         assert [counts[i] for i in range(len(depths))] == weights
 
 
+class TestDRRConformance:
+    """Deficit round-robin with quantum carry-over: conservation, exact
+    long-run proportional share, and the fifo age-promotion bound."""
+
+    @settings(max_examples=30, deadline=None)
+    @given(weights=st.lists(st.integers(1, 4), min_size=2, max_size=4),
+           budget=st.integers(1, 16),
+           depth_seed=st.integers(0, 10_000),
+           flushes=st.integers(2, 20))
+    def test_quantum_conservation_deficits_never_minted(
+            self, weights, budget, depth_seed, flushes):
+        """Across any flush sequence with ragged (even empty) windows:
+        quanta credited == served + live deficit + credit destroyed on
+        window drain, exactly, per QP. Deficits are never negative and
+        never appear out of thin air."""
+        import random
+        rng = random.Random(depth_seed)
+        n = len(weights)
+        wmap = {i: w for i, w in enumerate(weights)}
+        state = {}
+        served = {i: 0 for i in range(n)}
+        for _ in range(flushes):
+            wins = [(i, tuple(range(rng.randint(0, 12)))) for i in range(n)]
+            _, counts = schedule_plan(wins, scheduler="drr", weights=wmap,
+                                      budget=budget, state=state)
+            for i in range(n):
+                served[i] += counts.get(i, 0)
+            for i in range(n):
+                credited = state["credited"].get(i, 0)
+                deficit = state["deficits"].get(i, 0)
+                destroyed = state["destroyed"].get(i, 0)
+                assert deficit >= 0
+                assert credited == served[i] + deficit + destroyed, (
+                    i, credited, served[i], deficit, destroyed)
+
+    @settings(max_examples=20, deadline=None)
+    @given(weights=st.lists(st.integers(1, 5), min_size=2, max_size=5),
+           budget=st.integers(2, 12),
+           ragged_seed=st.integers(0, 10_000))
+    def test_drr_long_run_share_proportional_to_weight(
+            self, weights, budget, ragged_seed):
+        """Continuously backlogged QPs with ragged window depths: over
+        many budgeted flushes each QP's service share matches its weight
+        within 5% (the acceptance criterion) — plain WRR drifts here
+        because service a budget truncates mid-round is never repaid."""
+        import random
+        rng = random.Random(ragged_seed)
+        n = len(weights)
+        wmap = {i: w for i, w in enumerate(weights)}
+        state = {}
+        served = {i: 0 for i in range(n)}
+        flushes = 150
+        for _ in range(flushes):
+            # ragged but never dry: depth >= budget keeps every QP
+            # backlogged through the whole flush
+            wins = [(i, tuple(range(budget + rng.randint(0, 7))))
+                    for i in range(n)]
+            _, counts = schedule_plan(wins, scheduler="drr", weights=wmap,
+                                      budget=budget, state=state)
+            for i in range(n):
+                served[i] += counts.get(i, 0)
+        total = sum(served.values())
+        assert total == flushes * budget
+        wsum = sum(weights)
+        for i, w in enumerate(weights):
+            assert abs(served[i] / total - w / wsum) <= 0.05, (
+                weights, budget, served)
+
+    @settings(max_examples=20, deadline=None)
+    @given(n_victims=st.integers(1, 3), budget=st.integers(2, 8),
+           promote_after=st.integers(1, 4))
+    def test_fifo_age_promotion_no_starvation_bound(
+            self, n_victims, budget, promote_after):
+        """fifo with promote_after=T: a continuously backlogged QP is
+        never unserved for more than T + ceil(victims/budget) consecutive
+        flushes (T to get promoted, then the oldest-first promotion queue
+        drains at `budget` QPs per flush) — the unbounded starvation fifo
+        exhibits without promotion becomes a hard bound."""
+        state = {}
+        n = 1 + n_victims
+        bound = promote_after + -(-n_victims // budget)
+        gap = {i: 0 for i in range(n)}
+        for _ in range(40):
+            # QP0's window always deeper than the budget: unpromoted fifo
+            # would hand it every flush forever
+            wins = [(0, tuple(range(4 * budget)))]
+            wins += [(i, tuple(range(4))) for i in range(1, n)]
+            _, counts = schedule_plan(wins, scheduler="fifo", budget=budget,
+                                      state=state,
+                                      promote_after=promote_after)
+            for i in range(n):
+                gap[i] = 0 if counts.get(i, 0) else gap[i] + 1
+                assert gap[i] <= bound, (i, gap, counts)
+
+    def test_fifo_without_promotion_still_starves(self):
+        """The baseline stays intact: no promote_after -> the deep first
+        window takes every budget (the PR-2 starvation parity case)."""
+        state = {}
+        for _ in range(10):
+            wins = [(0, tuple(range(64))), (1, tuple(range(8)))]
+            _, counts = schedule_plan(wins, scheduler="fifo", budget=8,
+                                      state=state)
+            assert counts == {0: 8, 1: 0}
+
+    def test_drr_engine_integration_shares_track_weights(self):
+        """The engine-level acceptance check: RDMAEngine(scheduler='drr')
+        under budgeted flushes serves re-armed windows in exact weight
+        proportion over the long run, and the per-QP latency histogram
+        ledger accounts every serviced WQE."""
+        eng = RDMAEngine(n_peers=2, pool_size=4096, scheduler="drr",
+                         flush_budget=8)
+        mr = eng.register_mr(1, 0, 512)
+        weights = [3, 2, 1]
+        qps = [eng.create_qp(0, 1, weight=w) for w in weights]
+        flushes = 60
+        for _ in range(flushes):
+            for q, qp in enumerate(qps):     # keep everyone backlogged
+                while qp.pending_count < 8:
+                    eng.post_send(qp, WQE(
+                        Opcode.READ, qp.qp_num, wr_id=0,
+                        local_addr=600 + q, remote_addr=q, length=1,
+                        rkey=mr.rkey))
+                    eng.ring_sq_doorbell(qp, defer=True)
+            eng.flush_doorbells()
+        service = eng.stats["qp_service"]
+        total = sum(service[qp.qp_num] for qp in qps)
+        for qp, w in zip(qps, weights):
+            assert abs(service[qp.qp_num] / total - w / 6) <= 0.05, service
+            assert (sum(eng.stats["qp_latency_us"][qp.qp_num].values())
+                    == service[qp.qp_num])
+
+    def test_drr_exact_share_when_weight_exceeds_flush_budget(self):
+        """Regression: the engine snapshots at most flush_budget WQEs per
+        QP, which drr must not mistake for a drained window — a weight
+        LARGER than the budget spans several flushes and its cut quantum
+        must be repaid, not destroyed. Weights {20,1}, budget 4: the
+        long-run share is exactly 20/21, and no credit is ever destroyed
+        while both QPs stay backlogged."""
+        eng = RDMAEngine(n_peers=2, pool_size=4096, scheduler="drr",
+                         flush_budget=4)
+        mr = eng.register_mr(1, 0, 512)
+        qps = [eng.create_qp(0, 1, weight=20), eng.create_qp(0, 1)]
+        for _ in range(300):
+            for q, qp in enumerate(qps):
+                while qp.pending_count < 8:    # backlogged, ragged refill
+                    eng.post_send(qp, WQE(
+                        Opcode.READ, qp.qp_num, wr_id=0,
+                        local_addr=600 + q, remote_addr=q, length=1,
+                        rkey=mr.rkey))
+                    eng.ring_sq_doorbell(qp, defer=True)
+            eng.flush_doorbells()
+        service = eng.stats["qp_service"]
+        total = sum(service[qp.qp_num] for qp in qps)
+        share = service[qps[0].qp_num] / total
+        assert abs(share - 20 / 21) <= 0.05, service
+        assert not eng._sched_state.get("destroyed"), eng._sched_state
+
+
 class TestScheduledExecutionParity:
     @settings(max_examples=12, deadline=None)
     @given(windows=_windows, scheduler=_scheduler,
