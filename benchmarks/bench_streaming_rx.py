@@ -1,0 +1,241 @@
+# Streaming-compute RX ring vs ControlMsg batches (the PR-4 tentpole
+# claim, paper §IV-D): the same packet stream is parsed three ways —
+#
+#   ctrl      one ControlMsg per burst (the PR-3 lookaside path: a host
+#             round trip per invocation),
+#   serial    RX ring drained by LCKernel.stream() on a pipeline_depth=1
+#             block with eager write-backs (2 flushes per burst),
+#   pipelined pipeline_depth=4: burst i+1's ring gather is armed while
+#             burst i computes, so fetches and write-backs share ONE
+#             descriptor table per flush.
+#
+# All three must be byte-identical to each other (and to kernels/ref via
+# the lc_offload conformance suite). The measured phase replays the
+# exact warm-up push/drain cycle, so steady-state streaming must record
+# ZERO new descriptor-program compiles — the acceptance criterion CI
+# gates — and the pipelined run must beat the serial run on flushes and
+# wall clock. Writes BENCH_streaming.json; p99 ring-to-status latency
+# comes from the ring's pow2-µs histogram.
+import json
+import time
+
+import numpy as np
+
+POOL = 1 << 16
+RING_DEPTH = 32                  # packets per fill cycle
+BURST = 12                       # does not divide RING_DEPTH: 12/12/8
+PIPE_DEPTH = 4
+DATA_PEER, LC_PEER = 1, 0
+WARM_CYCLES = 1
+CYCLES = 8                       # measured fill/drain cycles
+SMOKE_CYCLES = 3
+
+
+def _headers(n, seed=0):
+    rng = np.random.default_rng(seed)
+    pkts = rng.integers(0, 256, size=(n, 64)).astype(np.uint8)
+    pkts[::3, 12:14] = [8, 0]            # every 3rd packet is RoCEv2
+    pkts[::3, 23] = 17
+    pkts[::3, 36:38] = [18, 183]
+    return pkts
+
+
+def _want(pkts):
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    return np.asarray(ref.ref_parse_packets(jnp.asarray(pkts)))
+
+
+def _setup(pipeline_depth):
+    from repro.core.lookaside import LookasideBlock
+    from repro.core.rdma import RDMAEngine
+    from repro.core.streaming import RXRing
+    from repro.kernels.lc_offload import (STREAM_PARSER_WORKLOAD,
+                                          register_default_kernels)
+
+    eng = RDMAEngine(n_peers=2, pool_size=POOL)
+    blk = LookasideBlock(eng, peer=LC_PEER, scratch_base=POOL // 2,
+                         scratch_size=POOL // 4,
+                         pipeline_depth=pipeline_depth,
+                         eager_writeback=(pipeline_depth == 1))
+    register_default_kernels(blk)
+    ring = RXRing(eng, peer=LC_PEER, base=POOL - RING_DEPTH * 64,
+                  depth=RING_DEPTH, policy="backpressure")
+    out_mr = eng.register_mr(DATA_PEER, 0, RING_DEPTH * 4)
+    k = blk.attach_ring(STREAM_PARSER_WORKLOAD, ring, out_peer=DATA_PEER,
+                        out_rkey=out_mr.rkey, out_base=0, burst=BURST)
+    return eng, blk, ring, k
+
+
+def _drive_cycles(eng, ring, k, pkts):
+    """Fill the ring to depth, drain it with stream(), read back the
+    cycle's meta rows (slot-indexed), repeat. Returns the stream's meta
+    rows in arrival order plus the wall seconds spent INSIDE stream() —
+    the consumption datapath under test (pushes are the MAC's arrival
+    process, readbacks the observer)."""
+    meta = np.zeros((len(pkts), 4), np.float32)
+    drain_s = 0.0
+    i = 0
+    while i < len(pkts):
+        n = min(RING_DEPTH, len(pkts) - i)
+        for j in range(n):
+            assert ring.push(pkts[i + j])
+        t0 = time.perf_counter()
+        consumed = k.stream()
+        drain_s += time.perf_counter() - t0
+        assert consumed == n, (consumed, n)
+        rows = eng.read_buffer(DATA_PEER, 0, RING_DEPTH * 4
+                               ).reshape(RING_DEPTH, 4)
+        for j in range(n):
+            meta[i + j] = rows[(i + j) % RING_DEPTH]
+        i += n
+    return meta, drain_s
+
+
+def run_ring(pkts, pipeline_depth, warm_pkts):
+    """Warm-up cycle(s), then the measured replay of the same fill/drain
+    pattern: steady-state streaming must compile nothing new."""
+    from repro.core.rdma.transport import (descriptor_cache_size,
+                                           staging_cache_size)
+    from repro.core.streaming.rx_ring import percentile_us
+
+    eng, blk, ring, k = _setup(pipeline_depth)
+    _drive_cycles(eng, ring, k, warm_pkts)            # warm every bucket
+    d0, s0 = descriptor_cache_size(), staging_cache_size()
+    f0 = eng.stats["flushes"]
+    ring.stats["latency_us"].clear()
+    meta, wall = _drive_cycles(eng, ring, k, pkts)
+    return {
+        "wall_s": wall,
+        "pkts_per_s": len(pkts) / wall,
+        "flushes": eng.stats["flushes"] - f0,
+        "warm_descriptor_compiles": descriptor_cache_size() - d0,
+        "warm_qdma_compiles": staging_cache_size() - s0,
+        "p99_ring_to_status_us": percentile_us(ring.stats["latency_us"]),
+        "lc_pipeline": dict(eng.stats["lc_pipeline"]),
+        "ring": {kk: v for kk, v in ring.stats.items()
+                 if kk != "latency_us"},
+    }, meta
+
+
+def run_controlmsg(pkts):
+    """The PR-3 path: packets pre-placed on the data peer, one
+    ControlMsg per burst, host polls each StatusMsg."""
+    from repro.core.lookaside import ControlMsg, LookasideBlock
+    from repro.core.rdma import RDMAEngine
+    from repro.kernels.lc_offload import (PARSER_WORKLOAD,
+                                          register_default_kernels)
+
+    eng = RDMAEngine(n_peers=2, pool_size=POOL)
+    blk = LookasideBlock(eng, peer=LC_PEER, scratch_base=POOL // 2,
+                         scratch_size=POOL // 4)
+    register_default_kernels(blk)
+    n = len(pkts)
+    p_addr, out_addr = 1024, 1024 + n * 64
+    mr = eng.register_mr(DATA_PEER, p_addr, n * 64 + n * 4)
+    eng.write_buffer(DATA_PEER, p_addr, pkts.astype(np.float32).ravel())
+    f0 = eng.stats["flushes"]
+    t0 = time.perf_counter()
+    i = 0
+    while i < n:
+        b = min(BURST, n - i, RING_DEPTH - i % RING_DEPTH)
+        blk.dispatch(ControlMsg(
+            PARSER_WORKLOAD,
+            (DATA_PEER, mr.rkey, p_addr + i * 64, b, out_addr + i * 4),
+            tag=i))
+        st = blk.poll(PARSER_WORKLOAD)
+        assert st is not None and st.ok, st
+        i += b
+    wall = time.perf_counter() - t0
+    meta = eng.read_buffer(DATA_PEER, out_addr, n * 4).reshape(n, 4)
+    return {"wall_s": wall, "pkts_per_s": n / wall,
+            "flushes": eng.stats["flushes"] - f0}, meta
+
+
+def run(verbose: bool = True, smoke: bool = False, out_json: str = ""):
+    from repro.core.rdma.simulator import simulate_streaming_rx
+
+    cycles = SMOKE_CYCLES if smoke else CYCLES
+    warm = _headers(WARM_CYCLES * RING_DEPTH, seed=1)
+    pkts = _headers(cycles * RING_DEPTH, seed=2)
+    want = _want(pkts)
+
+    ctrl, meta_ctrl = run_controlmsg(pkts)
+    serial, meta_serial = run_ring(pkts, 1, warm)
+    piped, meta_piped = run_ring(pkts, PIPE_DEPTH, warm)
+    model = simulate_streaming_rx(len(pkts), burst=BURST,
+                                  pipeline_depth=PIPE_DEPTH)
+
+    rec = {
+        "workload": {"n_pkts": len(pkts), "burst": BURST,
+                     "ring_depth": RING_DEPTH,
+                     "pipeline_depth": PIPE_DEPTH, "smoke": smoke},
+        "controlmsg": ctrl, "ring_serial": serial,
+        "ring_pipelined": piped,
+        "warm_descriptor_compiles": (serial["warm_descriptor_compiles"]
+                                     + piped["warm_descriptor_compiles"]),
+        "warm_qdma_compiles": (serial["warm_qdma_compiles"]
+                               + piped["warm_qdma_compiles"]),
+        "serial_over_pipelined_flushes": (serial["flushes"]
+                                          / max(1, piped["flushes"])),
+        "serial_over_pipelined_wall": (serial["wall_s"]
+                                       / piped["wall_s"]),
+        "model": model,
+    }
+    if verbose:
+        print(f"streaming_ctrl,{ctrl['wall_s'] * 1e6:.1f},"
+              f"{ctrl['pkts_per_s']:.0f}pkts/s,flushes={ctrl['flushes']}")
+        print(f"streaming_ring_serial,{serial['wall_s'] * 1e6:.1f},"
+              f"{serial['pkts_per_s']:.0f}pkts/s,"
+              f"flushes={serial['flushes']},"
+              f"p99={serial['p99_ring_to_status_us']:.0f}us")
+        print(f"streaming_ring_pipelined,{piped['wall_s'] * 1e6:.1f},"
+              f"{piped['pkts_per_s']:.0f}pkts/s,"
+              f"flushes={piped['flushes']},"
+              f"p99={piped['p99_ring_to_status_us']:.0f}us,"
+              f"overlapped={piped['lc_pipeline']['overlapped_flushes']}")
+        print(f"streaming_warm_compiles,0.0,"
+              f"desc={rec['warm_descriptor_compiles']}"
+              f"+qdma={rec['warm_qdma_compiles']}")
+        print(f"streaming_flush_ratio,0.0,"
+              f"{rec['serial_over_pipelined_flushes']:.2f}x")
+
+    # -- acceptance criteria (the PR's hard claims) ----------------------
+    np.testing.assert_array_equal(meta_ctrl, want)     # byte-identical
+    np.testing.assert_array_equal(meta_serial, want)
+    np.testing.assert_array_equal(meta_piped, want)
+    assert rec["warm_descriptor_compiles"] == 0, (
+        "steady-state streaming recompiled descriptor programs: "
+        f"{rec['warm_descriptor_compiles']}")
+    assert rec["warm_qdma_compiles"] == 0, (
+        f"ring pushes recompiled staging: {rec['warm_qdma_compiles']}")
+    assert serial["flushes"] > piped["flushes"], (
+        "pipelining must merge fetch+write-back flushes: "
+        f"{serial['flushes']} vs {piped['flushes']}")
+    # the deterministic flush ratio above is the overlap proof; the
+    # wall-clock claim gets slack in smoke mode (short measured window
+    # on a possibly noisy CI runner), strict in the committed full run
+    slack = 1.25 if smoke else 1.0
+    assert serial["wall_s"] * slack > piped["wall_s"], (
+        "pipelined drain must beat serial: "
+        f"{serial['wall_s']:.4f}s vs {piped['wall_s']:.4f}s")
+    assert piped["lc_pipeline"]["overlapped_flushes"] > 0, (
+        "no flush overlapped a fetch with an earlier write-back")
+    assert model["pipeline_speedup"] > 1.0
+    assert model["ring_speedup_vs_ctrl"] > 1.0
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rec, f, indent=2, default=float)
+            f.write("\n")
+        if verbose:
+            print(f"# wrote {out_json}")
+    return rec
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    run(out_json="BENCH_streaming.json")

@@ -15,7 +15,7 @@ def main() -> None:
                             bench_lc_offload, bench_pipeline,
                             bench_qp_fairness, bench_rdma_read,
                             bench_rdma_write, bench_roofline,
-                            bench_transport_compile)
+                            bench_streaming_rx, bench_transport_compile)
 
     sections = [
         ("Fig9/10 RDMA read (single vs batch)", bench_rdma_read.run),
@@ -36,6 +36,9 @@ def main() -> None:
         ("SecIV-C lookaside offload vs host staging",
          functools.partial(bench_lc_offload.run,
                            out_json="BENCH_lc_offload.json")),
+        ("SecIV-D streaming RX ring + pipelined invocations",
+         functools.partial(bench_streaming_rx.run,
+                           out_json="BENCH_streaming.json")),
         ("SecIV-C/D compute-block kernels", bench_kernels.run),
         ("pipeline-parallel schedule (scale-out)", bench_pipeline.run),
         ("Roofline table (from dry-run artifacts)", bench_roofline.run),

@@ -1,0 +1,238 @@
+#!/usr/bin/env python
+"""CI baseline gate: smoke benches + schema-driven regression checks.
+
+Replaces the old inline-bash heredoc in ``scripts/ci.sh``. Each gate
+names a committed baseline (``BENCH_*.json``), the smoke runner that
+produces a fresh CI artifact (written to ``ci_artifacts/BENCH_*.ci.json``,
+never over the baseline), and a list of rules:
+
+    Rule(key, direction, tolerance)
+
+``key`` is a dotted path into the bench record; ``direction`` says which
+way regressions point:
+
+    "<="  lower is better  — fail if  new > base * (1 + tolerance)
+    ">="  higher is better — fail if  new < base * (1 - tolerance)
+    "=="  must match       — fail if outside tolerance (exact for
+                             bools/ints at tolerance 0)
+
+Only scale-invariant keys are gated (compile counts, ratios, parity
+flags, fairness indices): smoke runs are smaller than the committed
+full runs, so absolute wall-clocks and event counts are recorded in the
+artifacts but never compared.
+
+Usage:
+    python scripts/ci_gate.py                     # run benches + gate
+    python scripts/ci_gate.py --update-baselines  # refresh BENCH_*.json
+    python scripts/ci_gate.py --artifact-dir DIR  # non-default out dir
+
+Exit status 1 lists every regressed key with its rule.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Tuple
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACT_DIR = "ci_artifacts"
+
+
+@dataclass(frozen=True)
+class Rule:
+    key: str                 # dotted path into the bench record
+    direction: str           # "<=" | ">=" | "=="
+    tolerance: float = 0.0   # relative slack on the baseline value
+
+
+@dataclass(frozen=True)
+class Gate:
+    name: str
+    baseline: str            # committed BENCH_*.json (repo root)
+    artifact: str            # smoke-run record (inside the artifact dir)
+    rules: Tuple[Rule, ...]
+    runner: Optional[Callable[..., dict]] = None
+
+
+def lookup(record: dict, dotted: str):
+    cur = record
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def check_rule(rule: Rule, record: dict, baseline: dict) -> Optional[str]:
+    """One per-key regression message, or None when within tolerance.
+    A key missing from the BASELINE is skipped (older baselines predate
+    it — refresh with --update-baselines); missing from the fresh RECORD
+    it is itself a regression (the bench stopped reporting it)."""
+    base = lookup(baseline, rule.key)
+    if base is None:
+        return None
+    got = lookup(record, rule.key)
+    if got is None:
+        return (f"{rule.key}: missing from the fresh record "
+                f"(baseline has {base!r})")
+    if isinstance(base, bool) or isinstance(got, bool):
+        ok = got == base if rule.direction == "==" else bool(got) >= bool(
+            base) if rule.direction == ">=" else bool(got) <= bool(base)
+        return None if ok else (
+            f"{rule.key}: {got!r} vs baseline {base!r} ({rule.direction})")
+    got, base = float(got), float(base)
+    tol = rule.tolerance
+    if rule.direction == "<=":
+        limit = base * (1 + tol) if base >= 0 else base * (1 - tol)
+        if got > limit:
+            return (f"{rule.key}: {got:g} > allowed {limit:g} "
+                    f"(baseline {base:g}, +{tol:.0%})")
+    elif rule.direction == ">=":
+        limit = base * (1 - tol) if base >= 0 else base * (1 + tol)
+        if got < limit:
+            return (f"{rule.key}: {got:g} < required {limit:g} "
+                    f"(baseline {base:g}, -{tol:.0%})")
+    elif rule.direction == "==":
+        if abs(got - base) > tol * max(abs(base), 1e-12):
+            return (f"{rule.key}: {got:g} != baseline {base:g} "
+                    f"(±{tol:.0%})")
+    else:
+        raise ValueError(f"direction must be <=|>=|==, got "
+                         f"{rule.direction!r}")
+    return None
+
+
+def check_gate(gate: Gate, record: dict, baseline: dict) -> List[str]:
+    out = []
+    for rule in gate.rules:
+        msg = check_rule(rule, record, baseline)
+        if msg is not None:
+            out.append(f"{gate.name}.{msg}")
+    return out
+
+
+# --------------------------------------------------------------------------
+# The committed baseline schema: every BENCH_*.json the repo gates.
+# --------------------------------------------------------------------------
+
+def _run_transport(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_transport_compile
+    return bench_transport_compile.run(
+        verbose=True, n_doorbells=20 if smoke else 100, out_json=out_json)
+
+
+def _run_fairness(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_qp_fairness
+    return bench_qp_fairness.run(verbose=True, out_json=out_json)
+
+
+def _run_lc_offload(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_lc_offload
+    return bench_lc_offload.run(verbose=True, smoke=smoke,
+                                out_json=out_json)
+
+
+def _run_streaming(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_streaming_rx
+    return bench_streaming_rx.run(verbose=True, smoke=smoke,
+                                  out_json=out_json)
+
+
+GATES: Tuple[Gate, ...] = (
+    Gate("transport", "BENCH_transport.json", "BENCH_transport.ci.json",
+         rules=(
+             Rule("descriptor_compiles", "<="),
+             Rule("qdma_staged_compiles", "<="),
+             Rule("pool_parity_with_seed_executor", "=="),
+             Rule("qdma_pool_parity", "=="),
+         ),
+         runner=_run_transport),
+    Gate("fairness", "BENCH_fairness.json", "BENCH_fairness.ci.json",
+         rules=(
+             Rule("rr.jain_first_flush", ">=", 0.02),
+             Rule("rr.worst_backlogged_ratio", "<=", 0.0),
+             Rule("fifo.jain_first_flush", "<=", 0.0),   # starvation pin
+             Rule("qdma.staged_compiles", "<="),
+             Rule("qdma.pool_parity", "=="),
+         ),
+         runner=_run_fairness),
+    Gate("lc_offload", "BENCH_lc_offload.json", "BENCH_lc_offload.ci.json",
+         rules=(
+             Rule("descriptor_compiles", "<="),
+             Rule("qdma_compiles", "<="),
+             Rule("bytes_moved_ratio", "==", 0.0),
+             Rule("contention.host_jain_while_lc_streams", ">=", 0.1),
+         ),
+         runner=_run_lc_offload),
+    Gate("streaming", "BENCH_streaming.json", "BENCH_streaming.ci.json",
+         rules=(
+             Rule("warm_descriptor_compiles", "<="),
+             Rule("warm_qdma_compiles", "<="),
+             Rule("serial_over_pipelined_flushes", ">=", 0.25),
+             Rule("model.ring_speedup_vs_ctrl", ">=", 0.05),
+             Rule("model.pipeline_speedup", ">=", 0.05),
+         ),
+         runner=_run_streaming),
+)
+
+
+def run_gates(gates=GATES, artifact_dir: str = ARTIFACT_DIR,
+              update_baselines: bool = False) -> int:
+    os.makedirs(artifact_dir, exist_ok=True)
+    sys.path.insert(0, REPO)                       # benchmarks package
+    sys.path.insert(0, os.path.join(REPO, "src"))  # repro package
+    regressions: List[str] = []
+    for gate in gates:
+        mode = "full" if update_baselines else "smoke"
+        print(f"== {gate.name} ({mode}) ==", flush=True)
+        artifact = os.path.join(artifact_dir, gate.artifact)
+        record = gate.runner(artifact, smoke=not update_baselines)
+        base_path = os.path.join(REPO, gate.baseline)
+        if update_baselines:
+            shutil.copyfile(artifact, base_path)
+            print(f"# updated {gate.baseline} from {artifact}")
+            continue
+        if not os.path.exists(base_path):
+            regressions.append(
+                f"{gate.name}: committed baseline {gate.baseline} missing "
+                "(run with --update-baselines to create it)")
+            continue
+        with open(base_path) as f:
+            baseline = json.load(f)
+        found = check_gate(gate, record, baseline)
+        for msg in found:
+            print(f"REGRESSION {msg}", flush=True)
+        if not found:
+            checked = [r.key for r in gate.rules
+                       if lookup(baseline, r.key) is not None]
+            print(f"# {gate.name}: {len(checked)} gated keys within "
+                  f"baseline ({', '.join(checked)})")
+        regressions.extend(found)
+    if regressions:
+        print(f"\nCI gate FAILED: {len(regressions)} regression(s) vs "
+              "committed baselines", file=sys.stderr)
+        return 1
+    print("\nCI gate OK" if not update_baselines
+          else "\nbaselines updated")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="refresh the committed BENCH_*.json files from "
+                         "fresh smoke runs instead of gating")
+    ap.add_argument("--artifact-dir", default=ARTIFACT_DIR,
+                    help="where BENCH_*.ci.json artifacts are written "
+                         f"(default: {ARTIFACT_DIR}/)")
+    args = ap.parse_args(argv)
+    return run_gates(artifact_dir=args.artifact_dir,
+                     update_baselines=args.update_baselines)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

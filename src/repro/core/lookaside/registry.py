@@ -29,10 +29,31 @@ memory, ``load``/``store`` for local dev_mem scratch.
 Control-FIFO overflow is *backpressure*, not a crash: ``dispatch``
 returns a retryable ``StatusMsg(ok=False)`` instead of raising through
 the engine loop.
+
+Multi-invocation pipelining (the §IV-D follow-up): a kernel fn may be a
+GENERATOR — everything up to its first ``yield`` is the operand-fetch
+phase (post READ WQEs, ``commit(wait=False)``), everything after it the
+compute/write-back phase. On a block built with ``pipeline_depth > 1``
+the service loop admits up to ``pipeline_depth`` invocations at once,
+each into its own scratch *partition*: invocation *i+1*'s fetch WQEs are
+armed (deferred) while invocation *i* computes, so one shared flush
+executes *i*'s write-back alongside *i+1*'s fetch — one descriptor table
+where the serial path needed two. Head/tail credit accounting lands in
+``engine.stats["lc_pipeline"]``.
+
+Streaming compute (§IV-D): ``attach_ring`` binds a kernel to an
+``RXRing`` and ``LCKernel.stream()`` drains it — up to ``ring_burst``
+pending packets are claimed per invocation and gathered into kernel
+scratch by ONE descriptor-table execution per flush (loopback READ WQEs
+on the kernel's own ``lc=True`` QP), with no ControlMsg round-trip per
+packet. Ring slots are freed when the gather lands; ring-to-status
+latency is histogrammed when the StatusMsg fires.
 """
 from __future__ import annotations
 
+import inspect
 import itertools
+from collections import deque
 from typing import Callable, Dict, List, Optional, Set
 
 from repro.core.lookaside.control import ControlMsg, FIFO, StatusMsg
@@ -58,13 +79,23 @@ class LCKernel:
         self.control_fifo = FIFO()
         self.status_fifo = FIFO()
         self.interrupt_handler: Optional[Callable[[StatusMsg], None]] = None
+        self.block = None                    # set by LookasideBlock.register
+        self.ring = None                     # set by attach_ring
+        self.ring_burst = 32
+        self.stream_out = None               # (out_peer, out_rkey, out_base)
+
+    def stream(self, max_bursts: Optional[int] = None) -> int:
+        """Drain this kernel's attached RX ring (see
+        ``LookasideBlock.stream``). Returns packets consumed."""
+        return self.block.stream(self.workload_id, max_bursts=max_bursts)
 
 
 class _Invocation:
     """In-flight state of one ControlMsg: outstanding WQEs + outcome."""
 
     __slots__ = ("kernel", "msg", "outstanding", "failures", "fn_done",
-                 "error", "result_addr", "finalized")
+                 "error", "result_addr", "finalized", "partition",
+                 "cursor", "on_fetched", "on_finalized")
 
     def __init__(self, kernel: LCKernel, msg: ControlMsg):
         self.kernel = kernel
@@ -75,6 +106,10 @@ class _Invocation:
         self.error: Optional[str] = None
         self.result_addr: Optional[int] = None
         self.finalized = False
+        self.partition: Optional[int] = None     # scratch partition index
+        self.cursor: Optional[int] = None        # partition bump cursor
+        self.on_fetched: Optional[Callable] = None    # first yield landed
+        self.on_finalized: Optional[Callable] = None  # StatusMsg pushed
 
 
 class LCContext:
@@ -150,7 +185,7 @@ class LCContext:
 
     # -- local scratch: the AXI4 data interface ---------------------------
     def alloc(self, length: int) -> int:
-        return self._block._alloc(length)
+        return self._block._alloc(length, self._inv)
 
     def load(self, addr: int, length: int):
         return self.engine.read_buffer(self.peer, addr, length)
@@ -167,12 +202,22 @@ class LookasideBlock:
     per-invocation bump allocator hands out (recycled whenever no
     invocation is in flight). ``eager_writeback`` is the default commit
     mode kernels use for their result write-back.
+
+    ``pipeline_depth > 1`` enables multi-invocation pipelining: the
+    scratch region splits into ``pipeline_depth`` equal partitions, each
+    held by one in-flight invocation from admission to finalize — so
+    invocation *i+1* may arm its operand fetch while *i*'s write-back is
+    still in flight without the bump allocator aliasing their scratch.
+    Credits = free partitions; ``engine.stats["lc_pipeline"]`` ledgers
+    head (finalized), tail (admitted), credit waits, and how many flushes
+    actually overlapped a fetch with an earlier invocation's write-back.
     """
 
     def __init__(self, engine, peer: int = 0,
                  scratch_base: Optional[int] = None,
                  scratch_size: Optional[int] = None,
-                 eager_writeback: bool = True):
+                 eager_writeback: bool = True,
+                 pipeline_depth: int = 1):
         self.engine = engine                 # shared RDMA engine (paper §I)
         self.peer = peer
         self.scratch_base = (engine.pool_size // 2 if scratch_base is None
@@ -180,20 +225,58 @@ class LookasideBlock:
         self.scratch_size = (engine.pool_size - self.scratch_base
                              if scratch_size is None else scratch_size)
         self.eager_writeback = eager_writeback
+        self.pipeline_depth = max(1, int(pipeline_depth))
+        self._part_size = self.scratch_size // self.pipeline_depth
+        self._free_parts = list(range(self.pipeline_depth))
+        # Double-buffer split: at most half the partitions fetch while
+        # the other half's write-backs drain — both sides of ONE shared
+        # flush. A full-depth fetch window would alternate fetch-only
+        # and write-back-only flushes instead of overlapping them.
+        self._stage_window = max(1, self.pipeline_depth // 2)
         self.kernels: Dict[int, LCKernel] = {}
         self._cursor = self.scratch_base
         self._inflight = 0
         self._wr: Dict[int, _Invocation] = {}     # wr_id -> invocation
         self._wr_ids = itertools.count(0x40000)
+        # stream() attaches per-ControlMsg lifecycle hooks (ring-slot
+        # release on fetch, latency stamp on status) keyed by message
+        # identity; _admit_invocation pops them onto the invocation.
+        self._hooks: Dict[int, Dict] = {}
         self.stats = {"dispatched": 0, "completed": 0, "errors": 0,
                       "backpressure": 0, "status_drops": 0}
+        # head/tail credit ledger of the invocation pipeline, surfaced on
+        # the engine's one stats surface (tail - head = in flight).
+        # Blocks SHARE the engine-wide ledger (like qp_service): a second
+        # block accumulates into it instead of discarding the first
+        # block's history; "depth" reports the deepest pipeline attached.
+        lp = engine.stats.setdefault("lc_pipeline", {})
+        for key in ("head", "tail", "in_flight_peak", "credit_waits",
+                    "overlapped_flushes", "fetch_wqes_overlapped"):
+            lp.setdefault(key, 0)
+        lp["depth"] = max(lp.get("depth", 0), self.pipeline_depth)
+        self._lp = lp
 
     def register(self, workload_id: int, fn: Callable, name: str = "",
                  weight: int = 1) -> LCKernel:
         if workload_id in self.kernels:
             raise KeyError(f"workload_id {workload_id} already registered")
         k = LCKernel(workload_id, fn, name, weight)
+        k.block = self
         self.kernels[workload_id] = k
+        return k
+
+    def attach_ring(self, workload_id: int, ring, out_peer: int,
+                    out_rkey: int, out_base: int,
+                    burst: int = 32) -> LCKernel:
+        """Bind an ``RXRing`` to a streaming kernel: ``stream()`` drains
+        the ring in bursts of up to ``burst`` packets, and the kernel
+        writes each packet's status/metadata row to ``out_base +
+        slot_index * 4`` on ``out_peer`` (rkey-checked) — the meta ring
+        mirrors the packet ring slot-for-slot."""
+        k = self.kernels[workload_id]
+        k.ring = ring
+        k.ring_burst = max(1, int(burst))
+        k.stream_out = (out_peer, out_rkey, out_base)
         return k
 
     def register_interrupt(self, workload_id: int,
@@ -226,14 +309,65 @@ class LookasideBlock:
         messages enqueued with ``dispatch(..., service=False)``)."""
         self._service(self.kernels[workload_id])
 
+    def stream(self, workload_id: int,
+               max_bursts: Optional[int] = None) -> int:
+        """Streaming-compute drain (§IV-D): consume the kernel's RX ring
+        without a per-packet host round trip.
+
+        Pending slots are claimed in bursts of up to ``ring_burst``; each
+        burst becomes ONE kernel invocation whose operand fetch is the
+        loopback gather of the burst's (≤ 2, wrap) contiguous slot spans
+        — one descriptor-table execution per flush. Slots are freed the
+        moment the gather lands (``on_fetched``), so the producer can
+        refill while the kernel still computes; ring-to-status latency is
+        stamped when the burst's StatusMsg fires. All claimed bursts are
+        enqueued BEFORE one service pass, so a ``pipeline_depth > 1``
+        block overlaps burst *i*'s compute with burst *i+1*'s gather.
+        Returns the number of packets consumed."""
+        k = self.kernels[workload_id]
+        ring, (out_peer, out_rkey, out_base) = k.ring, k.stream_out
+        consumed = 0
+        bursts = 0
+        while ring.available and (max_bursts is None
+                                  or bursts < max_bursts):
+            n = min(ring.available, k.ring_burst)
+            spans, stamps = ring.begin_consume(n)
+            (a0, c0), (a1, c1) = (spans + [(0, 0)])[:2]
+            msg = ControlMsg(workload_id,
+                             (self.peer, ring.mr.rkey, ring.base,
+                              out_peer, out_rkey, out_base,
+                              a0, c0, a1, c1),
+                             tag=self.stats["dispatched"])
+            st = self.dispatch(msg, service=False)
+            if st is not None:           # control FIFO backpressure:
+                self._service(k)         # drain, then re-dispatch
+                st = self.dispatch(msg, service=False)
+                if st is not None:       # FIFO still full after a full
+                    raise RuntimeError(  # drain: nothing can progress
+                        f"stream burst rejected twice: {st.detail}")
+            hooks = self._hooks.setdefault(id(msg), {})
+            hooks["on_fetched"] = (lambda ring=ring, n=n:
+                                   ring.complete_consume(n))
+            hooks["on_finalized"] = (lambda ring=ring, stamps=stamps:
+                                     ring.record_status(stamps))
+            consumed += n
+            bursts += 1
+        self._service(k)
+        return consumed
+
     def _service(self, k: LCKernel) -> None:
+        if self.pipeline_depth > 1:
+            self._service_pipelined(k)
+            return
         while k.control_fifo.not_empty:
             msg = k.control_fifo.pop()
-            inv = _Invocation(k, msg)
-            self._inflight += 1
+            inv = self._admit_invocation(k, msg)
             ctx = LCContext(self, inv)
             try:
-                inv.result_addr = k.fn(ctx, *msg.args)
+                res = k.fn(ctx, *msg.args)
+                if inspect.isgenerator(res):
+                    res = self._drive(inv, res)
+                inv.result_addr = res
             except Exception as e:       # kernel fault -> error status
                 inv.error = str(e)
                 # ring + drain whatever the kernel posted before faulting
@@ -244,6 +378,115 @@ class LookasideBlock:
                 self._finalize(inv)
             # else: CQE-driven — _on_cqe finalizes when the last
             # write-back lands (possibly in a later host-driven flush)
+
+    def _admit_invocation(self, k: LCKernel, msg: ControlMsg,
+                          partition: Optional[int] = None) -> _Invocation:
+        inv = _Invocation(k, msg)
+        hooks = self._hooks.pop(id(msg), None)
+        if hooks:
+            inv.on_fetched = hooks.get("on_fetched")
+            inv.on_finalized = hooks.get("on_finalized")
+        if partition is not None:
+            inv.partition = partition
+            inv.cursor = self.scratch_base + partition * self._part_size
+        self._inflight += 1
+        self._lp["tail"] += 1
+        in_flight = self._lp["tail"] - self._lp["head"]
+        if in_flight > self._lp["in_flight_peak"]:
+            self._lp["in_flight_peak"] = in_flight
+        return inv
+
+    def _drive(self, inv: _Invocation, gen) -> Optional[int]:
+        """Serial generator driver: each ``yield`` means "my armed WQEs
+        must land before I continue" — flush the shared engine until this
+        invocation's CQEs arrive, then resume the kernel."""
+        try:
+            while True:
+                next(gen)
+                self._drain(inv)
+                self._fetched(inv)
+        except StopIteration as e:
+            return e.value
+
+    def _fetched(self, inv: _Invocation) -> None:
+        """First-phase (operand fetch) CQEs landed: release claimed
+        resources (e.g. RX-ring slots) exactly once."""
+        if inv.on_fetched is not None:
+            inv.on_fetched()
+            inv.on_fetched = None
+
+    def _service_pipelined(self, k: LCKernel) -> None:
+        """Pipelined service loop: up to ``pipeline_depth`` invocations
+        in flight, each in its own scratch partition.
+
+        Round structure — (1) ADMIT invocations while partition credits
+        last, running each to its first ``yield`` so its operand-fetch
+        WQEs are armed *deferred*; (2) one shared FLUSH executes every
+        armed fetch together with earlier invocations' armed write-backs
+        (one descriptor table where the serial path needed two); (3)
+        RESUME each fetched invocation — compute + arm write-back. The
+        write-back then rides the NEXT round's flush, overlapped with the
+        next admissions' fetches."""
+        stages: deque = deque()          # fetch armed, awaiting CQEs
+        wb: List[_Invocation] = []       # fn done, write-back in flight
+        while k.control_fifo.not_empty or stages or wb:
+            wb = [i for i in wb if not i.finalized]
+            while (k.control_fifo.not_empty
+                   and len(stages) < self._stage_window):
+                if not self._free_parts:
+                    self._lp["credit_waits"] += 1
+                    break
+                msg = k.control_fifo.pop()
+                inv = self._admit_invocation(k, msg,
+                                             self._free_parts.pop(0))
+                ctx = LCContext(self, inv)
+                try:
+                    res = k.fn(ctx, *msg.args)
+                    if inspect.isgenerator(res):
+                        next(res)        # arm fetch (deferred, NO flush)
+                        stages.append((inv, ctx, res))
+                        continue
+                    inv.result_addr = res
+                except StopIteration as e:   # generator with no yield
+                    inv.result_addr = e.value
+                except Exception as e:
+                    inv.error = str(e)
+                    ctx.commit(wait=True)
+                inv.fn_done = True
+                if not inv.outstanding:
+                    self._finalize(inv)
+                else:
+                    wb.append(inv)
+            if stages:
+                fetch_armed = sum(len(i.outstanding)
+                                  for i, _, _ in stages)
+                if any(i.outstanding for i in wb):
+                    self._lp["overlapped_flushes"] += 1
+                    self._lp["fetch_wqes_overlapped"] += fetch_armed
+                self._drain(stages[0][0])    # shared flush: fetch + wb
+                still: deque = deque()
+                for inv, ctx, gen in stages:
+                    if inv.outstanding:      # budgeted flush cut it short
+                        still.append((inv, ctx, gen))
+                        continue
+                    self._fetched(inv)
+                    try:
+                        next(gen)            # compute + arm write-back
+                        still.append((inv, ctx, gen))   # multi-phase
+                        continue
+                    except StopIteration as e:
+                        inv.result_addr = e.value
+                    except Exception as e:
+                        inv.error = str(e)
+                        ctx.commit(wait=True)
+                    inv.fn_done = True
+                    if not inv.outstanding:
+                        self._finalize(inv)
+                    else:
+                        wb.append(inv)       # rides the next round's flush
+                stages = still
+            elif wb:
+                self._drain(wb[0])           # land trailing write-backs
 
     # -- CQE-driven completion --------------------------------------------
     def _qp(self, kernel: LCKernel, remote_peer: int):
@@ -270,7 +513,14 @@ class LookasideBlock:
 
     def _finalize(self, inv: _Invocation) -> None:
         inv.finalized = True
+        # a kernel that faulted BEFORE its first yield never reached the
+        # fetch-landed hook: release the claimed resources (ring slots)
+        # here or the ring wedges with _head stuck behind _pend
+        self._fetched(inv)
         self._inflight -= 1
+        self._lp["head"] += 1
+        if inv.partition is not None:    # credit the partition back
+            self._free_parts.append(inv.partition)
         if self._inflight == 0:          # recycle the bump allocator
             self._cursor = self.scratch_base
         k = inv.kernel
@@ -281,6 +531,9 @@ class LookasideBlock:
                       f"{inv.failures[0].status.value}")
         status = StatusMsg(k.workload_id, inv.msg.tag, ok,
                            inv.result_addr if ok else None, detail=detail)
+        if inv.on_finalized is not None:     # e.g. ring-to-status stamp
+            inv.on_finalized()
+            inv.on_finalized = None
         if not k.status_fifo.try_push(status):
             k.status_fifo.pop()          # bounded RTL FIFO: drop oldest
             self.stats["status_drops"] += 1
@@ -309,7 +562,20 @@ class LookasideBlock:
                         "scheduled (doorbell not armed?)")
 
     # -- scratch allocator -------------------------------------------------
-    def _alloc(self, length: int) -> int:
+    def _alloc(self, length: int,
+               inv: Optional[_Invocation] = None) -> int:
+        if inv is not None and inv.partition is not None:
+            # per-invocation partition: concurrent pipelined invocations
+            # can never alias each other's scratch
+            end = (self.scratch_base
+                   + (inv.partition + 1) * self._part_size)
+            if inv.cursor + length > end:
+                raise MemoryError(
+                    f"LC scratch partition {inv.partition} exhausted: "
+                    f"need {length}, [{inv.cursor}, {end}) left")
+            addr = inv.cursor
+            inv.cursor += length
+            return addr
         if self._cursor + length > self.scratch_base + self.scratch_size:
             raise MemoryError(
                 f"LC scratch exhausted: need {length}, "

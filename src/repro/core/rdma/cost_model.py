@@ -96,10 +96,28 @@ class LCOffload:
     chunk_bytes: int = 16384
 
 
+@dataclass(frozen=True)
+class StreamingRX:
+    """Streaming-compute cost constants (paper §IV-D).
+
+    The RX ring lives in dev_mem: packets land straight off the MAC and
+    the parser fires per burst with no host round trip. ``parse_per_pkt_s``
+    is the P4-style header-parse pipeline at the 250 MHz fabric clock
+    (two cycles per header once the pipe is full); ``status_fifo_s`` the
+    on-card status-FIFO push the host later polls for free;
+    ``meta_bytes`` one [is_rdma, opcode, dest_qp, class] metadata row.
+    """
+    slot_bytes: int = 64
+    meta_bytes: int = 16
+    parse_per_pkt_s: float = 2 * 4e-9
+    status_fifo_s: float = 40e-9
+
+
 PAPER_HW = PaperHW()
 TPU_V5E = TpuV5e()
 XLA_COST = XLACost()
 LC_OFFLOAD = LCOffload()
+STREAMING_RX = StreamingRX()
 
 
 def jain_fairness_index(shares) -> float:

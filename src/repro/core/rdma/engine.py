@@ -85,10 +85,16 @@ class RDMAEngine:
         # contention on the shared engine); "qp_bytes" ledgers completed
         # payload bytes per QP; "qp_latency_us" histograms doorbell-to-
         # execution latency per QP in pow2-µs buckets.
+        # "lc_pipeline" is the Lookaside multi-invocation pipeline's
+        # head/tail credit ledger (admitted vs finalized invocations,
+        # credit waits, flushes that overlapped a fetch with an earlier
+        # write-back) — engine-wide: every LookasideBlock on this engine
+        # accumulates into the same dict (like qp_service).
         self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0,
                       "coalesced_wqes": 0, "flushes": 0,
                       "qp_service": {}, "lc_service": {}, "lc_wqes": 0,
                       "qp_bytes": {}, "qp_latency_us": {},
+                      "lc_pipeline": {},
                       "transport": self.transport.stats}
 
     # ------------------------------------------------------------------ MRs

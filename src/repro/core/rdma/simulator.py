@@ -23,7 +23,8 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence
 
 from repro.core.rdma.cost_model import (LC_OFFLOAD, LCOffload, PAPER_HW,
-                                        PaperHW, jain_fairness_index)
+                                        PaperHW, STREAMING_RX, StreamingRX,
+                                        jain_fairness_index)
 
 
 @dataclass(frozen=True)
@@ -158,6 +159,26 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
         "qdma_writes": float(qdma_writes),
         "qdma_compiles": float(qdma_compiles),
     }
+    # Streaming-compute terms (§IV-D): RX-ring health and the Lookaside
+    # invocation pipeline's overlap ledger, when present.
+    rx_pushed = xstats.get("rx_ring_pushed", 0)
+    rx_refused = (xstats.get("rx_ring_dropped", 0)
+                  + xstats.get("rx_ring_backpressure", 0))
+    if rx_pushed or rx_refused:
+        out["rx_ring_pushed"] = float(rx_pushed)
+        out["rx_ring_consumed"] = float(xstats.get("rx_ring_consumed", 0))
+        out["rx_ring_refused"] = float(rx_refused)
+        out["rx_ring_refusal_rate"] = rx_refused / (rx_pushed + rx_refused)
+        out["rx_ring_peak_occupancy"] = float(
+            xstats.get("rx_ring_peak_occupancy", 0))
+    lp = stats.get("lc_pipeline") or {}
+    if lp.get("tail"):
+        out["lc_pipeline_depth"] = float(lp.get("depth", 1))
+        out["lc_pipeline_in_flight_peak"] = float(
+            lp.get("in_flight_peak", 0))
+        out["lc_pipeline_overlapped_flushes"] = float(
+            lp.get("overlapped_flushes", 0))
+        out["lc_pipeline_credit_waits"] = float(lp.get("credit_waits", 0))
     # Fairness term: engine.stats carries the per-QP service ledger.
     qp_service = stats.get("qp_service")
     if qp_service:
@@ -307,6 +328,78 @@ def simulate_lc_offload(m: int, k: int, n: int, elem_bytes: int = 4,
     }
 
 
+def simulate_streaming_rx(n_pkts: int, burst: int = 32,
+                          pipeline_depth: int = 4,
+                          qp_location: str = "dev_mem",
+                          hw: PaperHW = PAPER_HW,
+                          srx: StreamingRX = STREAMING_RX
+                          ) -> Dict[str, float]:
+    """Model the §IV-D streaming-compute datapath three ways.
+
+    *ControlMsg batches* (the PR-3 lookaside path): the host dispatches
+    one ControlMsg per ``burst`` packets — every burst pays the doorbell
+    MMIO, a READ round trip for the operand fetch, the parse, a
+    write-back dispatch, and the host's CQ/status poll.
+
+    *RX ring, serial*: packets already sit in the device-resident ring
+    (landed off the MAC), so a burst costs only the on-card descriptor
+    gather, the parse, the meta write-back, and a status-FIFO push — no
+    per-invocation host round trip.
+
+    *RX ring, pipelined*: invocation *i+1*'s gather overlaps invocation
+    *i*'s parse (the LookasideBlock double-buffer), so the steady-state
+    interval is ``max(move, parse)`` instead of their sum.
+
+    Latency outputs model a fully backlogged ring (the bench pushes the
+    whole stream, then drains): the p99 ring-to-status latency is the
+    LAST burst's — it waits out every earlier burst's service, so p99 ≈
+    stream makespan, exactly what the executed pow2-µs histogram shows.
+    Throughputs are packets/s over the whole stream.
+    """
+    if n_pkts <= 0 or burst <= 0:
+        raise ValueError((n_pkts, burst))
+    o = _request_overheads(hw, qp_location)
+    n_bursts = -(-n_pkts // burst)
+    data = burst * srx.slot_bytes / hw.line_rate
+    meta = burst * srx.meta_bytes / hw.line_rate
+    parse = burst * srx.parse_per_pkt_s
+
+    # ControlMsg burst: doorbell + READ round trip + data, then the
+    # write-back dispatch and the software status poll.
+    ctrl_burst = (o["doorbell"] + o["fetch_first"] + o["request_wire"]
+                  + o["response_start"] + data + hw.wire_prop
+                  + parse
+                  + o["doorbell"] + o["fetch_first"] + meta
+                  + 0.5 * o["response_start"] + hw.wire_prop
+                  + o["completion"])
+    # Ring burst: on-card gather (descriptor fetch + data) + parse +
+    # meta write-back + status FIFO; no MMIO, no software poll.
+    move = (o["fetch_first"] + data) + (o["fetch_next"] + meta)
+    ring_burst = move + parse + srx.status_fifo_s
+    interval = max(move, parse + srx.status_fifo_s)
+    ctrl_total = n_bursts * ctrl_burst
+    serial_total = n_bursts * ring_burst
+    if pipeline_depth >= 2:
+        # pipeline fill (first gather) + steady intervals + last parse
+        pipe_total = (move + (n_bursts - 1) * interval + parse
+                      + srx.status_fifo_s)
+    else:
+        # depth 1 IS the serial path — no overlap to model
+        pipe_total = serial_total
+    out = {
+        "bursts": float(n_bursts),
+        "ctrl_pkts_per_s": n_pkts / ctrl_total,
+        "ring_serial_pkts_per_s": n_pkts / serial_total,
+        "ring_pipelined_pkts_per_s": n_pkts / pipe_total,
+        "ring_speedup_vs_ctrl": ctrl_total / serial_total,
+        "pipeline_speedup": serial_total / pipe_total,
+        "ctrl_p99_us": ctrl_total * 1e6,
+        "ring_serial_p99_us": serial_total * 1e6,
+        "ring_pipelined_p99_us": pipe_total * 1e6,
+    }
+    return out
+
+
 def simulate_dma(nbytes: int, direction: str = "read",
                  hw: PaperHW = PAPER_HW) -> float:
     """§VI-B.1: host<->dev_mem DMA throughput over QDMA AXI4-MM (bytes/s)."""
@@ -331,7 +424,7 @@ def run_testcase(path_or_dict) -> Dict:
     Testcase schema::
 
       {"name": str, "op": "read"|"write"|"dma"|"host_access"
-                          |"fair_schedule"|"lc_offload",
+                          |"fair_schedule"|"lc_offload"|"streaming_rx",
        "payload": int, "batch": int, "qp_location": "host_mem"|"dev_mem",
        "golden": {"throughput_gbps": float | null,
                   "latency_us": float | null,
@@ -348,6 +441,11 @@ def run_testcase(path_or_dict) -> Dict:
     optional ``elem_bytes``/``qp_location``) and pin the offloaded-vs-
     host-staged latency and bytes-moved metrics of
     ``simulate_lc_offload``.
+
+    ``streaming_rx`` testcases carry ``n_pkts``/``burst`` (and optional
+    ``pipeline_depth``/``qp_location``) and pin the ControlMsg-vs-ring
+    and serial-vs-pipelined throughput/latency metrics of
+    ``simulate_streaming_rx``.
     """
     tc = (json.load(open(path_or_dict)) if isinstance(path_or_dict, str)
           else path_or_dict)
@@ -384,6 +482,13 @@ def run_testcase(path_or_dict) -> Dict:
             qp_location=tc.get("qp_location", "dev_mem"))
         out.update(r)
         out["latency_us"] = r["offload_latency_us"]
+    elif op == "streaming_rx":
+        r = simulate_streaming_rx(
+            tc["n_pkts"], burst=tc.get("burst", 32),
+            pipeline_depth=tc.get("pipeline_depth", 4),
+            qp_location=tc.get("qp_location", "dev_mem"))
+        out.update(r)
+        out["latency_us"] = r["ring_pipelined_p99_us"]
     else:
         raise ValueError(op)
 

@@ -111,7 +111,14 @@ def _new_stats() -> dict:
             # QDMA staging path (host_write / sync_host_to_dev): chunk
             # buckets first seen vs reused, plus total staged writes.
             "qdma_writes": 0, "qdma_cache_hits": 0,
-            "qdma_cache_misses": 0, "qdma_compiles": 0}
+            "qdma_cache_misses": 0, "qdma_compiles": 0,
+            # Streaming-compute RX ring (§IV-D): packets landed in /
+            # drained from the device-resident ring, plus ring-full
+            # outcomes (drop vs backpressure) and the occupancy
+            # high-water mark (set by streaming.rx_ring.RXRing).
+            "rx_ring_pushed": 0, "rx_ring_consumed": 0,
+            "rx_ring_dropped": 0, "rx_ring_backpressure": 0,
+            "rx_ring_peak_occupancy": 0}
 
 
 def pack_staging(data, addr: int, peer: int, pool_size: int, dtype

@@ -6,3 +6,6 @@ from repro.core.streaming.compress import (  # noqa: F401
     compress_bucket, compressed_all_reduce, decompress_bucket,
     init_error_state,
 )
+from repro.core.streaming.rx_ring import (  # noqa: F401
+    RXRing, percentile_us, record_latency_us,
+)

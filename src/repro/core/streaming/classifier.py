@@ -47,12 +47,47 @@ class TransferDesc:
 
 class TrafficRouter:
     """Routes descriptors to registered path handlers and keeps per-class
-    byte/dispatch counters (the NIC's telemetry role)."""
+    byte/dispatch counters (the NIC's telemetry role).
 
-    def __init__(self):
+    With an ``rx_ring`` attached it is also the §IV-D MAC ingress:
+    ``ingest_packets`` classifies raw headers byte-level and lands the
+    non-RDMA share in the streaming-compute RX ring — no ControlMsg per
+    packet — while RoCEv2 traffic is counted toward the RDMA engine
+    path."""
+
+    def __init__(self, rx_ring=None):
+        self.rx_ring = rx_ring
         self.handlers: Dict[str, Callable[[List[TransferDesc]], None]] = {}
         self.counters: Dict[TrafficClass, Dict[str, int]] = {
             tc: {"bytes": 0, "count": 0} for tc in TrafficClass}
+        self.pkt_counters = {"rdma": 0, "streamed": 0, "dropped": 0,
+                             "backpressure": 0}
+
+    def ingest_packets(self, headers: np.ndarray) -> Dict[str, int]:
+        """MAC-side packet ingress (paper §IV-D): split RDMA from
+        non-RDMA traffic with the streaming classifier kernel. RDMA
+        packets belong to the RDMA engine (counted here); non-RDMA
+        packets land in the RX ring for the streaming-compute kernel.
+        When the ring refuses a packet the outcome matches the ring's
+        policy — ``dropped`` (lost) vs ``backpressure`` (retryable after
+        a drain) — so router and ring/transport telemetry agree. With no
+        ring attached the streamed share is dropped. Returns this call's
+        counts."""
+        headers = np.asarray(headers)
+        meta = classify_headers(headers)
+        out = {"rdma": 0, "streamed": 0, "dropped": 0, "backpressure": 0}
+        refused = ("dropped" if self.rx_ring is None
+                   or self.rx_ring.policy == "drop" else "backpressure")
+        for h, is_rdma in zip(headers, meta[:, 0]):
+            if is_rdma:
+                out["rdma"] += 1
+            elif self.rx_ring is not None and self.rx_ring.push(h):
+                out["streamed"] += 1
+            else:
+                out[refused] += 1
+        for key, n in out.items():
+            self.pkt_counters[key] += n
+        return out
 
     def register_path(self, name: str,
                       handler: Callable[[List[TransferDesc]], None]) -> None:

@@ -1,0 +1,181 @@
+"""Streaming-compute RX descriptor ring (paper §IV-D).
+
+The paper's streaming mode processes packets straight off the MAC: packet
+buffers land in a device-resident ring and user logic fires per arrival —
+no per-invocation host round trip (cf. FPsPIN's handler-per-arrival
+rings). Here the ring is a region of the engine's device pool:
+
+  * producer — the MAC/ingress path (``TrafficRouter.ingest_packets``)
+    pushes raw headers into ring slots over the QDMA staging path (one
+    pow2 chunk bucket: slot-sized writes never recompile),
+  * consumer — ``LCKernel.stream()`` drains up to ``ring_burst`` pending
+    slots per invocation, gathering them into kernel scratch with
+    loopback READ WQEs executed as ONE descriptor table per flush (the
+    PR-1 shape-bucketed programs — steady-state streaming adds zero new
+    XLA compiles after warm-up).
+
+Cursors are monotonic sequence numbers (the hardware head/tail pointers);
+``seq % depth`` is the slot index:
+
+    head  — slots freed back to the producer (their gather landed)
+    pend  — slots claimed by an in-flight consumer burst
+    tail  — slots produced
+
+A full ring either DROPS the packet (``policy="drop"`` — the MAC cannot
+stall) or asserts BACKPRESSURE (``policy="backpressure"`` — flow control:
+the producer retries after a drain); both are counted here AND mirrored
+into ``transport.stats`` (the ``rx_ring_*`` keys) so the engine's one
+stats surface shows ring health. Ring-to-status latency is histogrammed
+per packet in pow2-µs ceiling buckets when the streaming kernel's
+StatusMsg lands (cf. ORCA's µs-scale accounting).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Deque, List, Tuple
+
+import numpy as np
+
+from repro.kernels.packet_parser import HDR_BYTES
+
+
+def record_latency_us(hist: dict, seconds: float) -> None:
+    """Bucket one latency sample into a pow2-µs ceiling histogram (the
+    same bucketing as ``engine.stats["qp_latency_us"]``)."""
+    us = seconds * 1e6
+    bucket = 1
+    while bucket < us:
+        bucket <<= 1
+    hist[bucket] = hist.get(bucket, 0) + 1
+
+
+def percentile_us(hist: dict, q: float = 0.99) -> float:
+    """Upper-edge percentile of a pow2-µs bucket histogram."""
+    total = sum(hist.values())
+    if not total:
+        return 0.0
+    rank = q * total
+    seen = 0
+    for bucket in sorted(hist):
+        seen += hist[bucket]
+        if seen >= rank:
+            return float(bucket)
+    return float(max(hist))
+
+
+class RXRing:
+    """Device-resident RX descriptor ring on one peer's pool.
+
+    ``base`` defaults to sitting just BELOW ``pool_size // 2`` so it
+    cannot alias a default-placed ``LookasideBlock`` scratch region
+    (which starts at ``pool_size // 2``); pass explicit regions when the
+    layout is custom. The ring registers its own MR so the streaming
+    kernel's loopback gather READs are rkey-checked like any other verbs
+    traffic.
+    """
+
+    def __init__(self, engine, peer: int = 0, base: int = None,
+                 depth: int = 64, slot_bytes: int = HDR_BYTES,
+                 policy: str = "drop"):
+        if policy not in ("drop", "backpressure"):
+            raise ValueError(
+                f"policy must be drop|backpressure, got {policy!r}")
+        self.engine = engine
+        self.peer = peer
+        self.depth = int(depth)
+        self.slot_bytes = int(slot_bytes)
+        self.base = (engine.pool_size // 2 - self.depth * self.slot_bytes
+                     if base is None else base)
+        assert self.base >= 0 and (self.base + self.depth * self.slot_bytes
+                                   <= engine.pool_size), "ring out of pool"
+        self.policy = policy
+        self.mr = engine.register_mr(peer, self.base,
+                                     self.depth * self.slot_bytes)
+        self._head = 0            # freed for the producer
+        self._pend = 0            # claimed by an in-flight burst
+        self._tail = 0            # produced
+        self._stamps: Deque[float] = deque()   # push times of [pend, tail)
+        self.stats = {"pushed": 0, "dropped": 0, "backpressure": 0,
+                      "consumed": 0, "wrap_bursts": 0,
+                      "peak_occupancy": 0, "latency_us": {}}
+
+    # ------------------------------------------------------------ cursors
+    @property
+    def occupancy(self) -> int:
+        """Slots not yet freed back to the producer."""
+        return self._tail - self._head
+
+    @property
+    def available(self) -> int:
+        """Slots a consumer burst can still claim."""
+        return self._tail - self._pend
+
+    @property
+    def space(self) -> int:
+        return self.depth - self.occupancy
+
+    def slot_addr(self, seq: int) -> int:
+        return self.base + (seq % self.depth) * self.slot_bytes
+
+    # ----------------------------------------------------------- producer
+    def push(self, header) -> bool:
+        """Land one packet in the next slot (the MAC arrival). Returns
+        False when the ring is full: the packet is dropped
+        (``policy="drop"``) or refused for retry (``"backpressure"``)."""
+        t = self.engine.transport.stats
+        if self.occupancy >= self.depth:
+            key = "dropped" if self.policy == "drop" else "backpressure"
+            self.stats[key] += 1
+            t["rx_ring_" + key] += 1
+            return False
+        header = np.asarray(header, np.float32).ravel()
+        assert header.shape[0] == self.slot_bytes, header.shape
+        self.engine.write_buffer(self.peer, self.slot_addr(self._tail),
+                                 header)
+        self._tail += 1
+        self._stamps.append(time.perf_counter())
+        self.stats["pushed"] += 1
+        t["rx_ring_pushed"] += 1
+        occ = self.occupancy
+        if occ > self.stats["peak_occupancy"]:
+            self.stats["peak_occupancy"] = occ
+            # engine-wide high-water mark: max across rings, not the
+            # latest ring's personal peak
+            t["rx_ring_peak_occupancy"] = max(
+                t["rx_ring_peak_occupancy"], occ)
+        return True
+
+    # ----------------------------------------------------------- consumer
+    def begin_consume(self, n: int) -> Tuple[List[Tuple[int, int]],
+                                             List[float]]:
+        """Claim the oldest ``n`` available slots for one burst. Returns
+        their contiguous ``(addr, count)`` spans (two when the burst
+        wraps) and the claimed packets' push stamps. Claimed slots stay
+        allocated until ``complete_consume`` (the gather must land before
+        the producer may overwrite them)."""
+        assert 0 < n <= self.available, (n, self.available)
+        s0 = self._pend
+        idx0 = s0 % self.depth
+        first = min(n, self.depth - idx0)
+        spans = [(self.slot_addr(s0), first)]
+        if n > first:
+            spans.append((self.base, n - first))
+            self.stats["wrap_bursts"] += 1
+        self._pend += n
+        stamps = [self._stamps.popleft() for _ in range(n)]
+        return spans, stamps
+
+    def complete_consume(self, n: int) -> None:
+        """Free ``n`` claimed slots back to the producer — called once
+        their gather READ CQEs have landed."""
+        assert self._head + n <= self._pend, (self._head, n, self._pend)
+        self._head += n
+        self.stats["consumed"] += n
+        self.engine.transport.stats["rx_ring_consumed"] += n
+
+    def record_status(self, stamps: List[float]) -> None:
+        """Histogram ring-to-status latency for one finalized burst."""
+        now = time.perf_counter()
+        for t0 in stamps:
+            record_latency_us(self.stats["latency_us"], now - t0)

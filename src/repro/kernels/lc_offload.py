@@ -11,6 +11,9 @@ ControlMsg argument conventions (all ints):
 
   ``systolic_mm``   : (remote_peer, rkey, a_addr, b_addr, out_addr, m, k, n)
   ``packet_parser`` : (remote_peer, rkey, pkts_addr, n_pkts, out_addr)
+  ``packet_parser_stream`` (built by ``LookasideBlock.stream``, not the
+  host): (ring_peer, ring_rkey, ring_base, out_peer, out_rkey, out_base,
+  a0, c0, a1, c1) — the burst's ≤ 2 contiguous RX-ring slot spans.
 
 Correctness contract: outputs are byte-identical to the host-side oracles
 in ``repro.kernels.ref`` on the same operand bytes (for the matmul, with
@@ -28,6 +31,34 @@ from repro.kernels.systolic_mm import systolic_mm
 
 MM_WORKLOAD = 0x10
 PARSER_WORKLOAD = 0x11
+STREAM_PARSER_WORKLOAD = 0x12
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(3, (int(n) - 1).bit_length())
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_parser(bp: int, interpret: bool):
+    """Jitted parser per pow2 packet bucket: steady-state streaming must
+    not re-trace the Pallas call per burst (the compute-side analogue of
+    the descriptor executor's shape-bucket cache). Callers bucket
+    ``bp`` to a power of two, so the unbounded cache stays a handful of
+    entries."""
+    import jax
+    return jax.jit(functools.partial(parse_packets, block_p=bp,
+                                     interpret=interpret))
+
+
+def _parse_bucketed(pkts: np.ndarray, interpret: bool) -> np.ndarray:
+    """Pad a packet batch to its pow2 bucket, parse with the cached
+    jitted program, slice the live rows (row-wise kernel: padding never
+    changes a live row's bytes)."""
+    n = pkts.shape[0]
+    bp = _next_pow2(n)
+    padded = np.zeros((bp, HDR_BYTES), np.uint8)
+    padded[:n] = pkts
+    return _stream_parser(bp, interpret)(jnp.asarray(padded, jnp.uint8))[:n]
 
 
 def _mm_blocks(m: int, k: int, n: int):
@@ -76,21 +107,75 @@ def lc_packet_parser(ctx, remote_peer, rkey, pkts_addr, n_pkts, out_addr,
         raise RuntimeError(
             f"packet fetch failed: {ctx.failed[0].status.value}")
     pkts = ctx.load(in_loc, nbytes).reshape(n_pkts, HDR_BYTES)
-    meta = parse_packets(jnp.asarray(pkts, jnp.uint8), block_p=n_pkts,
-                         interpret=interpret)
+    meta = _parse_bucketed(pkts, interpret)
     ctx.store(out_loc, np.asarray(meta, np.float32).reshape(-1))
     ctx.write_remote(remote_peer, rkey, out_loc, out_addr, n_pkts * 4)
     ctx.commit(wait=ctx.eager_writeback)
     return out_addr
 
 
+def lc_packet_parser_stream(ctx, ring_peer, ring_rkey, ring_base,
+                            out_peer, out_rkey, out_base,
+                            a0, c0, a1, c1, *, interpret: bool = True):
+    """Streaming ``packet_parser`` entry (§IV-D): parse one RX-ring burst.
+
+    A GENERATOR kernel — the two phases around the ``yield`` are what the
+    pipelined service loop overlaps across invocations:
+
+      fetch    — gather the burst's (≤ 2, wrap-split) contiguous ring
+                 spans into contiguous scratch with loopback READ WQEs on
+                 the kernel's own QP, armed deferred (one descriptor
+                 table per flush, shared with any armed host traffic);
+      compute  — parse the headers (the same Pallas kernel as the
+                 ControlMsg path, padded to a pow2 packet bucket so
+                 steady-state bursts reuse a handful of programs) and
+                 RDMA-WRITE each span's metadata rows to the meta ring
+                 on ``out_peer`` at the matching slot indices.
+
+    Byte-contract: identical rows to ``lc_packet_parser`` (and the
+    ``kernels/ref.py`` oracle) for the same header bytes.
+    """
+    n_pkts = c0 + c1
+    nbytes = n_pkts * HDR_BYTES
+    in_loc = ctx.alloc(nbytes)
+    meta_loc = ctx.alloc(n_pkts * 4)
+    off = 0
+    for addr, cnt in ((a0, c0), (a1, c1)):
+        if cnt:
+            ctx.read_remote(ring_peer, ring_rkey, addr, in_loc + off,
+                            cnt * HDR_BYTES)
+            off += cnt * HDR_BYTES
+    ctx.commit(wait=False)       # armed: the service loop flushes
+    yield                        # ...and resumes once the gather lands
+    if ctx.failed:
+        raise RuntimeError(
+            f"ring gather failed: {ctx.failed[0].status.value}")
+    pkts = ctx.load(in_loc, nbytes).reshape(n_pkts, HDR_BYTES)
+    meta = _parse_bucketed(pkts, interpret)
+    ctx.store(meta_loc, np.asarray(meta, np.float32).reshape(-1))
+    off = 0
+    for addr, cnt in ((a0, c0), (a1, c1)):
+        if cnt:
+            slot0 = (addr - ring_base) // HDR_BYTES
+            ctx.write_remote(out_peer, out_rkey, meta_loc + off,
+                             out_base + slot0 * 4, cnt * 4)
+            off += cnt * 4
+    ctx.commit(wait=ctx.eager_writeback)
+    return out_base
+
+
 def register_default_kernels(block, interpret: bool = True,
                              weight: int = 1):
-    """Register the paper's two example offload kernels on a block."""
+    """Register the paper's example offload kernels on a block (the two
+    ControlMsg kernels plus the streaming-RX parser entry)."""
     block.register(MM_WORKLOAD,
                    functools.partial(lc_systolic_mm, interpret=interpret),
                    "systolic_mm", weight=weight)
     block.register(PARSER_WORKLOAD,
                    functools.partial(lc_packet_parser, interpret=interpret),
                    "packet_parser", weight=weight)
+    block.register(STREAM_PARSER_WORKLOAD,
+                   functools.partial(lc_packet_parser_stream,
+                                     interpret=interpret),
+                   "packet_parser_stream", weight=weight)
     return block

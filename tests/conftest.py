@@ -1,6 +1,15 @@
 import os
 import sys
 
+
+def pytest_configure(config):
+    # CI runs the fast tier first (-m "not slow"), then -m slow: a fast
+    # failure short-circuits before any multi-device subprocess spawns.
+    config.addinivalue_line(
+        "markers",
+        "slow: ICI-subprocess tests (forced multi-device meshes / driver "
+        "e2e runs in child processes)")
+
 # Tests must see exactly ONE device (the dry-run forces 512 in its own
 # subprocess only). Keep XLA flags clean here.
 os.environ.pop("XLA_FLAGS", None)

@@ -1,0 +1,154 @@
+"""CI baseline gate unit tests: the schema-driven regression checks in
+``scripts/ci_gate.py`` must catch injected regressions with per-key
+messages, honor directions/tolerances, and support baseline updates —
+WITHOUT running any benchmark (the rule engine is pure)."""
+import json
+import os
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(REPO, "scripts"))
+
+import ci_gate  # noqa: E402
+from ci_gate import Gate, Rule, check_gate, check_rule, lookup  # noqa: E402
+
+
+class TestLookup:
+    def test_dotted_path(self):
+        rec = {"a": {"b": {"c": 3}}, "x": 1}
+        assert lookup(rec, "a.b.c") == 3
+        assert lookup(rec, "x") == 1
+        assert lookup(rec, "a.missing") is None
+        assert lookup(rec, "x.deeper") is None
+
+
+class TestRuleDirections:
+    def test_lower_is_better_fails_on_increase(self):
+        r = Rule("compiles", "<=")
+        assert check_rule(r, {"compiles": 4}, {"compiles": 4}) is None
+        msg = check_rule(r, {"compiles": 5}, {"compiles": 4})
+        assert msg is not None and "compiles" in msg and "5" in msg
+
+    def test_lower_is_better_tolerance(self):
+        r = Rule("wall", "<=", tolerance=0.5)
+        assert check_rule(r, {"wall": 1.4}, {"wall": 1.0}) is None
+        assert check_rule(r, {"wall": 1.6}, {"wall": 1.0}) is not None
+
+    def test_higher_is_better_fails_on_decrease(self):
+        r = Rule("jain", ">=", tolerance=0.02)
+        assert check_rule(r, {"jain": 0.99}, {"jain": 1.0}) is None
+        msg = check_rule(r, {"jain": 0.9}, {"jain": 1.0})
+        assert msg is not None and "jain" in msg
+
+    def test_exact_match_and_bools(self):
+        r = Rule("ratio", "==", tolerance=0.0)
+        assert check_rule(r, {"ratio": 2.0}, {"ratio": 2.0}) is None
+        assert check_rule(r, {"ratio": 2.1}, {"ratio": 2.0}) is not None
+        rb = Rule("parity", "==")
+        assert check_rule(rb, {"parity": True}, {"parity": True}) is None
+        assert check_rule(rb, {"parity": False},
+                          {"parity": True}) is not None
+
+    def test_key_missing_from_baseline_is_skipped(self):
+        # older baselines predate new keys: not a failure
+        assert check_rule(Rule("new_key", "<="), {"new_key": 9}, {}) is None
+
+    def test_key_missing_from_record_is_a_regression(self):
+        msg = check_rule(Rule("gone", "<="), {}, {"gone": 1})
+        assert msg is not None and "missing" in msg
+
+    def test_unknown_direction_raises(self):
+        with pytest.raises(ValueError, match="direction"):
+            check_rule(Rule("k", "!!"), {"k": 1}, {"k": 1})
+
+
+class TestInjectedRegression:
+    GATE = Gate("demo", "BENCH_demo.json", "BENCH_demo.ci.json",
+                rules=(Rule("descriptor_compiles", "<="),
+                       Rule("nested.jain", ">=", 0.02)))
+
+    def test_clean_record_passes(self):
+        base = {"descriptor_compiles": 2, "nested": {"jain": 1.0}}
+        assert check_gate(self.GATE, dict(base), base) == []
+
+    def test_injected_compile_regression_fails_with_named_key(self):
+        base = {"descriptor_compiles": 2, "nested": {"jain": 1.0}}
+        rec = {"descriptor_compiles": 7, "nested": {"jain": 1.0}}
+        msgs = check_gate(self.GATE, rec, base)
+        assert len(msgs) == 1
+        assert "demo.descriptor_compiles" in msgs[0] and "7" in msgs[0]
+
+    def test_multiple_regressions_all_reported(self):
+        base = {"descriptor_compiles": 2, "nested": {"jain": 1.0}}
+        rec = {"descriptor_compiles": 3, "nested": {"jain": 0.5}}
+        msgs = check_gate(self.GATE, rec, base)
+        assert len(msgs) == 2
+
+    def test_committed_schema_gates_all_four_benches(self):
+        """The live schema must cover every committed BENCH baseline,
+        with the compile-count keys gated at zero tolerance."""
+        names = {g.baseline for g in ci_gate.GATES}
+        assert names == {"BENCH_transport.json", "BENCH_fairness.json",
+                         "BENCH_lc_offload.json", "BENCH_streaming.json"}
+        for g in ci_gate.GATES:
+            compile_rules = [r for r in g.rules if "compile" in r.key]
+            assert compile_rules, f"{g.name} gates no compile counts"
+            assert all(r.direction == "<=" and r.tolerance == 0.0
+                       for r in compile_rules)
+            assert g.runner is not None
+
+    def test_gate_catches_regression_against_committed_baseline(self):
+        """End-to-end on the real schema: take each committed baseline,
+        bump a gated compile count, and the gate must fail on exactly
+        that key."""
+        for g in ci_gate.GATES:
+            with open(os.path.join(REPO, g.baseline)) as f:
+                base = json.load(f)
+            rule = next(r for r in g.rules if "compile" in r.key)
+            rec = json.loads(json.dumps(base))
+            node = rec
+            *parents, leaf = rule.key.split(".")
+            for p in parents:
+                node = node[p]
+            node[leaf] = node[leaf] + 3          # inject the regression
+            msgs = check_gate(g, rec, base)
+            assert len(msgs) == 1 and rule.key in msgs[0], (g.name, msgs)
+            assert check_gate(g, base, base) == []
+
+
+class TestRunGates:
+    @staticmethod
+    def _stub_gate(tmp_path, record):
+        def runner(out_json, smoke=True):
+            with open(out_json, "w") as f:
+                json.dump(record, f)
+            return record
+        return Gate("stub", str(tmp_path / "BENCH_stub.json"),
+                    "BENCH_stub.ci.json",
+                    rules=(Rule("compiles", "<="),), runner=runner)
+
+    def test_update_baselines_then_gate_passes(self, tmp_path, capsys):
+        art = tmp_path / "artifacts"
+        gate = self._stub_gate(tmp_path, {"compiles": 3})
+        assert ci_gate.run_gates((gate,), artifact_dir=str(art),
+                                 update_baselines=True) == 0
+        with open(tmp_path / "BENCH_stub.json") as f:
+            assert json.load(f) == {"compiles": 3}
+        assert os.path.exists(art / "BENCH_stub.ci.json")
+        assert ci_gate.run_gates((gate,), artifact_dir=str(art)) == 0
+
+    def test_missing_baseline_fails(self, tmp_path, capsys):
+        gate = self._stub_gate(tmp_path, {"compiles": 3})
+        assert ci_gate.run_gates((gate,),
+                                 artifact_dir=str(tmp_path / "a")) == 1
+
+    def test_regressed_record_fails_and_names_key(self, tmp_path, capsys):
+        with open(tmp_path / "BENCH_stub.json", "w") as f:
+            json.dump({"compiles": 1}, f)
+        gate = self._stub_gate(tmp_path, {"compiles": 4})
+        assert ci_gate.run_gates((gate,),
+                                 artifact_dir=str(tmp_path / "a")) == 1
+        out = capsys.readouterr().out
+        assert "REGRESSION stub.compiles" in out

@@ -9,6 +9,9 @@ import tempfile
 
 import pytest
 
+# every test here spawns a forced-multi-device child process
+pytestmark = pytest.mark.slow
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 

@@ -100,6 +100,7 @@ class TestOffloadParity:
         want = np.asarray(ref.ref_parse_packets(jnp.asarray(pkts)))
         np.testing.assert_array_equal(got, want)
 
+    @pytest.mark.slow
     def test_offload_parity_on_ici_transport(self):
         """Both kernels on the real collective transport (forced 2-device
         mesh): byte-identical to the oracles."""

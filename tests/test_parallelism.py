@@ -21,6 +21,7 @@ def _run_py(code: str, devices: int = 8, timeout: int = 560):
                           capture_output=True, text=True, timeout=timeout)
 
 
+@pytest.mark.slow
 def test_pipeline_parallel_matches_sequential():
     """4-stage pipeline over 8 microbatches == sequential layer stack."""
     code = """
@@ -53,6 +54,7 @@ print('PP_OK', err)
     assert "PP_OK" in r.stdout, r.stdout + r.stderr
 
 
+@pytest.mark.slow
 def test_pipeline_collectives_in_hlo():
     """The pipeline must lower to collective-permutes (stage transfers)."""
     code = """

@@ -228,6 +228,7 @@ def test_predict_from_stats_batching_wins():
     assert batched["wqes_per_doorbell"] == 50.0
 
 
+@pytest.mark.slow
 def test_ici_transport_parity_and_cache(tmp_path):
     """ICITransport (forced 4-device mesh) matches LocalTransport byte
     for byte on an address-varying workload and reuses one compile."""

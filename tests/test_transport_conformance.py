@@ -422,6 +422,7 @@ class TestQDMAStaging:
                 eng.read_buffer(0, i, ln), np.arange(ln, dtype=np.float32))
         assert eng.stats["transport"]["qdma_compiles"] <= 2
 
+    @pytest.mark.slow
     def test_ici_transport_qdma_parity_and_cache(self):
         """ICITransport (forced 4-device mesh): staged host_write round-
         trips byte-identically and stays inside the chunk-bucket compile
