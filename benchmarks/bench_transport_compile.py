@@ -115,6 +115,21 @@ def run(verbose: bool = True, n_doorbells: int = N_DOORBELLS,
     hit_rate = stats["cache_hits"] / max(
         1, stats["cache_hits"] + stats["cache_misses"])
 
+    # -- bucket pre-warm (dynamic bucket tuning, first slice): replay a
+    # prior run's (slots, chunk) histogram on a FRESH transport before
+    # its first doorbell — cold-start cache misses must vanish ---------
+    t_cold = LocalTransport(init)
+    for p in plans:
+        t_cold.execute_batch(p)
+    cold_misses = t_cold.stats["cache_misses"]
+    t_warm = LocalTransport(init)
+    prewarmed = t_warm.prewarm(t_desc.stats["bucket_hist"])
+    for p in plans:
+        t_warm.execute_batch(p)
+    prewarm_misses = t_warm.stats["cache_misses"]
+    prewarm_parity = bool(np.array_equal(np.asarray(t_cold.pool),
+                                         np.asarray(t_warm.pool)))
+
     # -- QDMA staging: host_write per-length recompiles vs chunk buckets --
     qdma = measure_qdma_compiles()
     model = predict_from_stats(stats, payload=128)
@@ -135,6 +150,11 @@ def run(verbose: bool = True, n_doorbells: int = N_DOORBELLS,
         "warm_doorbells_per_s": n_doorbells / desc_warm_s,
         "warm_wqes_per_s": n_doorbells * WQES_PER_DOORBELL / desc_warm_s,
         "pool_parity_with_seed_executor": parity,
+        "prewarmed_buckets": prewarmed,
+        "prewarm_cold_misses": cold_misses,
+        "prewarm_warmed_misses": prewarm_misses,
+        "prewarm_pool_parity": prewarm_parity,
+        "bucket_hist": dict(t_desc.stats["bucket_hist"]),
         "qdma_distinct_lengths": qdma["distinct_lengths"],
         "qdma_static_compiles": qdma["static_compiles"],
         "qdma_staged_compiles": qdma["staged_compiles"],
@@ -155,11 +175,18 @@ def run(verbose: bool = True, n_doorbells: int = N_DOORBELLS,
               f"hit_rate={hit_rate:.3f}")
         print(f"transport_compile_ratio,0.0,{ratio:.1f}x_fewer_compiles")
         print(f"transport_pool_parity,0.0,{parity}")
+        print(f"transport_prewarm,0.0,{cold_misses}cold->"
+              f"{prewarm_misses}warmed_misses"
+              f"({prewarmed}buckets)")
         print(f"qdma_compile_ratio,0.0,{qdma['static_compiles']}static->"
               f"{qdma['staged_compiles']}staged"
               f"({qdma['compile_ratio']:.1f}x)")
         print(f"qdma_pool_parity,0.0,{qdma['pool_parity']}")
     assert parity, "descriptor executor diverged from seed executor"
+    assert prewarm_misses == 0 and prewarm_misses < cold_misses, (
+        f"prewarm must drop cold-start misses: {cold_misses} cold vs "
+        f"{prewarm_misses} after prewarm({prewarmed} buckets)")
+    assert prewarm_parity, "prewarm corrupted the pool"
     assert ratio >= 10.0, (
         f"descriptor path must compile >=10x less, got {ratio:.1f}x "
         f"({static_compiles} static vs {desc_compiles} descriptor)")

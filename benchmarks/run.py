@@ -10,7 +10,7 @@ import traceback
 
 
 def main() -> None:
-    from benchmarks import (bench_dma, bench_grad_buckets,
+    from benchmarks import (bench_dispatch, bench_dma, bench_grad_buckets,
                             bench_host_latency, bench_kernels,
                             bench_lc_offload, bench_pipeline,
                             bench_qp_fairness, bench_rdma_read,
@@ -39,6 +39,9 @@ def main() -> None:
         ("SecIV-D streaming RX ring + pipelined invocations",
          functools.partial(bench_streaming_rx.run,
                            out_json="BENCH_streaming.json")),
+        ("SecIV-D match->action dispatch plane (mixed vs split rings)",
+         functools.partial(bench_dispatch.run,
+                           out_json="BENCH_dispatch.json")),
         ("SecIV-C/D compute-block kernels", bench_kernels.run),
         ("pipeline-parallel schedule (scale-out)", bench_pipeline.run),
         ("Roofline table (from dry-run artifacts)", bench_roofline.run),

@@ -5,11 +5,14 @@
 #                    here short-circuits before any subprocess spawns)
 #   2. slow tier   — pytest -m slow (ICI-subprocess tests: forced
 #                    multi-device meshes in child processes)
-#   3. bench gate  — scripts/ci_gate.py runs the smoke benchmarks into
-#                    ci_artifacts/BENCH_*.ci.json and fails on any gated
-#                    key regressing vs the committed BENCH_*.json
-#                    baselines (per-key schema + messages live there;
-#                    refresh baselines with
+#   3. bench gate  — scripts/ci_gate.py runs the smoke benchmarks
+#                    (transport / fairness / lc_offload / streaming /
+#                    dispatch — the match→action plane's mixed-class
+#                    parity + zero-compile + flush-merge claims ride the
+#                    dispatch gate) into ci_artifacts/BENCH_*.ci.json
+#                    and fails on any gated key regressing vs the
+#                    committed BENCH_*.json baselines (per-key schema +
+#                    messages live there; refresh baselines with
 #                    `python scripts/ci_gate.py --update-baselines`).
 #
 # Usage: scripts/ci.sh

@@ -142,6 +142,12 @@ def _run_streaming(out_json: str, smoke: bool = True) -> dict:
                                   out_json=out_json)
 
 
+def _run_dispatch(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_dispatch
+    return bench_dispatch.run(verbose=True, smoke=smoke,
+                              out_json=out_json)
+
+
 GATES: Tuple[Gate, ...] = (
     Gate("transport", "BENCH_transport.json", "BENCH_transport.ci.json",
          rules=(
@@ -149,6 +155,10 @@ GATES: Tuple[Gate, ...] = (
              Rule("qdma_staged_compiles", "<="),
              Rule("pool_parity_with_seed_executor", "=="),
              Rule("qdma_pool_parity", "=="),
+             # bucket pre-warm: replaying the observed (slots, chunk)
+             # histogram must leave zero cold-start misses, byte-exactly
+             Rule("prewarm_warmed_misses", "<="),
+             Rule("prewarm_pool_parity", "=="),
          ),
          runner=_run_transport),
     Gate("fairness", "BENCH_fairness.json", "BENCH_fairness.ci.json",
@@ -177,6 +187,20 @@ GATES: Tuple[Gate, ...] = (
              Rule("model.pipeline_speedup", ">=", 0.05),
          ),
          runner=_run_streaming),
+    Gate("dispatch", "BENCH_dispatch.json", "BENCH_dispatch.ci.json",
+         rules=(
+             # steady-state mixed-class dispatch compiles NOTHING new
+             Rule("warm_descriptor_compiles", "<="),
+             Rule("warm_qdma_compiles", "<="),
+             # per-class handler outputs byte-identical to their oracles
+             Rule("parser_parity", "=="),
+             Rule("quant_parity", "=="),
+             # the plane must keep merging per-class flushes, and the
+             # one-entry table must stay flush-identical to PR-4
+             Rule("flush_ratio_split_over_mixed", ">=", 0.05),
+             Rule("pr4_flush_parity", "==", 0.0),
+         ),
+         runner=_run_dispatch),
 )
 
 

@@ -41,20 +41,27 @@ executes *i*'s write-back alongside *i+1*'s fetch — one descriptor table
 where the serial path needed two. Head/tail credit accounting lands in
 ``engine.stats["lc_pipeline"]``.
 
-Streaming compute (§IV-D): ``attach_ring`` binds a kernel to an
-``RXRing`` and ``LCKernel.stream()`` drains it — up to ``ring_burst``
-pending packets are claimed per invocation and gathered into kernel
-scratch by ONE descriptor-table execution per flush (loopback READ WQEs
-on the kernel's own ``lc=True`` QP), with no ControlMsg round-trip per
-packet. Ring slots are freed when the gather lands; ring-to-status
-latency is histogrammed when the StatusMsg fires.
+Streaming compute (§IV-D): ring consumption lives in the dispatch plane
+(``streaming.dispatch.StreamDispatcher``) — ``attach_ring`` binds a
+kernel to an ``RXRing`` by building a ONE-ENTRY dispatcher (a MatchTable
+whose default action is that kernel), and ``LCKernel.stream()`` drains
+through it: up to ``ring_burst`` pending packets are claimed per
+invocation and gathered into kernel scratch by ONE descriptor-table
+execution per flush (loopback READ WQEs on the kernel's own ``lc=True``
+QP), with no ControlMsg round-trip per packet. Ring slots are freed when
+the gather lands; ring-to-status latency is histogrammed when the
+StatusMsg fires. A multi-entry table routes the same ring's slots to
+DIFFERENT handler kernels by parsed class; ``service_group`` then admits
+one invocation per handler before each shared flush, so every handler's
+operand-fetch gather for a service round lands in the same descriptor
+table.
 """
 from __future__ import annotations
 
 import inspect
 import itertools
 from collections import deque
-from typing import Callable, Dict, List, Optional, Set
+from typing import Callable, Dict, List, Optional, Sequence, Set
 
 from repro.core.lookaside.control import ControlMsg, FIFO, StatusMsg
 from repro.core.rdma.verbs import CQE, CQEStatus, Opcode, WQE
@@ -83,6 +90,7 @@ class LCKernel:
         self.ring = None                     # set by attach_ring
         self.ring_burst = 32
         self.stream_out = None               # (out_peer, out_rkey, out_base)
+        self.dispatcher = None               # one-entry plane (attach_ring)
 
     def stream(self, max_bursts: Optional[int] = None) -> int:
         """Drain this kernel's attached RX ring (see
@@ -271,12 +279,22 @@ class LookasideBlock:
         """Bind an ``RXRing`` to a streaming kernel: ``stream()`` drains
         the ring in bursts of up to ``burst`` packets, and the kernel
         writes each packet's status/metadata row to ``out_base +
-        slot_index * 4`` on ``out_peer`` (rkey-checked) — the meta ring
-        mirrors the packet ring slot-for-slot."""
+        slot_index * row`` on ``out_peer`` (rkey-checked) — the meta ring
+        mirrors the packet ring slot-for-slot.
+
+        Internally this is the one-entry degenerate case of the dispatch
+        plane: a ``StreamDispatcher`` over a ``MatchTable`` whose default
+        action is this kernel, so the whole ring belongs to it."""
+        from repro.core.streaming.dispatch import (MatchTable,
+                                                   StreamDispatcher)
         k = self.kernels[workload_id]
         k.ring = ring
         k.ring_burst = max(1, int(burst))
         k.stream_out = (out_peer, out_rkey, out_base)
+        k.dispatcher = StreamDispatcher(
+            self, ring, MatchTable(default=workload_id), burst=burst)
+        k.dispatcher.register_handler(workload_id, out_peer, out_rkey,
+                                      out_base)
         return k
 
     def register_interrupt(self, workload_id: int,
@@ -314,50 +332,47 @@ class LookasideBlock:
         """Streaming-compute drain (§IV-D): consume the kernel's RX ring
         without a per-packet host round trip.
 
-        Pending slots are claimed in bursts of up to ``ring_burst``; each
-        burst becomes ONE kernel invocation whose operand fetch is the
-        loopback gather of the burst's (≤ 2, wrap) contiguous slot spans
-        — one descriptor-table execution per flush. Slots are freed the
-        moment the gather lands (``on_fetched``), so the producer can
-        refill while the kernel still computes; ring-to-status latency is
-        stamped when the burst's StatusMsg fires. All claimed bursts are
-        enqueued BEFORE one service pass, so a ``pipeline_depth > 1``
-        block overlaps burst *i*'s compute with burst *i+1*'s gather.
-        Returns the number of packets consumed."""
+        Delegates to the kernel's one-entry ``StreamDispatcher`` (built
+        by ``attach_ring``): pending slots are claimed in bursts of up to
+        ``ring_burst``; each burst becomes ONE kernel invocation whose
+        operand fetch is the loopback gather of the burst's (≤ 2, wrap)
+        contiguous slot spans — one descriptor-table execution per
+        flush. Slots are freed the moment the gather lands
+        (``on_fetched``), so the producer can refill while the kernel
+        still computes; ring-to-status latency is stamped when the
+        burst's StatusMsg fires. All claimed bursts are enqueued BEFORE
+        one service pass, so a ``pipeline_depth > 1`` block overlaps
+        burst *i*'s compute with burst *i+1*'s gather. Returns the
+        number of packets consumed."""
         k = self.kernels[workload_id]
-        ring, (out_peer, out_rkey, out_base) = k.ring, k.stream_out
-        consumed = 0
-        bursts = 0
-        while ring.available and (max_bursts is None
-                                  or bursts < max_bursts):
-            n = min(ring.available, k.ring_burst)
-            spans, stamps = ring.begin_consume(n)
-            (a0, c0), (a1, c1) = (spans + [(0, 0)])[:2]
-            msg = ControlMsg(workload_id,
-                             (self.peer, ring.mr.rkey, ring.base,
-                              out_peer, out_rkey, out_base,
-                              a0, c0, a1, c1),
-                             tag=self.stats["dispatched"])
-            st = self.dispatch(msg, service=False)
-            if st is not None:           # control FIFO backpressure:
-                self._service(k)         # drain, then re-dispatch
-                st = self.dispatch(msg, service=False)
-                if st is not None:       # FIFO still full after a full
-                    raise RuntimeError(  # drain: nothing can progress
-                        f"stream burst rejected twice: {st.detail}")
-            hooks = self._hooks.setdefault(id(msg), {})
-            hooks["on_fetched"] = (lambda ring=ring, n=n:
-                                   ring.complete_consume(n))
-            hooks["on_finalized"] = (lambda ring=ring, stamps=stamps:
-                                     ring.record_status(stamps))
-            consumed += n
-            bursts += 1
-        self._service(k)
-        return consumed
+        # re-bind from the kernel attrs every call: tests/operators
+        # retarget k.ring / k.stream_out / k.ring_burst between drains
+        out_peer, out_rkey, out_base = k.stream_out
+        k.dispatcher.register_handler(workload_id, out_peer, out_rkey,
+                                      out_base)
+        k.dispatcher.ring = k.ring
+        k.dispatcher.burst = k.ring_burst
+        return k.dispatcher.service(max_bursts=max_bursts)
+
+    def service_group(self, workload_ids: Sequence[int]) -> None:
+        """Service several kernels' control FIFOs as ONE dispatch round
+        stream: with more than one backlogged kernel, admissions
+        round-robin across them so every kernel's operand-fetch WQEs are
+        armed before the shared flush — the match→action plane's
+        one-descriptor-table-per-service-round contract. A single
+        backlogged kernel takes the plain ``_service`` path (serial or
+        pipelined by ``pipeline_depth``), byte- and flush-identical to
+        the pre-dispatch behavior."""
+        kernels = [self.kernels[w] for w in workload_ids]
+        kernels = [k for k in kernels if k.control_fifo.not_empty]
+        if len(kernels) == 1:
+            self._service(kernels[0])
+        elif kernels:
+            self._service_grouped(kernels)
 
     def _service(self, k: LCKernel) -> None:
         if self.pipeline_depth > 1:
-            self._service_pipelined(k)
+            self._service_grouped([k])
             return
         while k.control_fifo.not_empty:
             msg = k.control_fifo.pop()
@@ -415,30 +430,51 @@ class LookasideBlock:
             inv.on_fetched()
             inv.on_fetched = None
 
-    def _service_pipelined(self, k: LCKernel) -> None:
-        """Pipelined service loop: up to ``pipeline_depth`` invocations
-        in flight, each in its own scratch partition.
+    def _service_grouped(self, kernels: Sequence[LCKernel]) -> None:
+        """Pipelined service loop — one kernel (the classic
+        ``pipeline_depth > 1`` path) or a dispatch group of several, up
+        to the admission window of invocations in flight at once.
 
         Round structure — (1) ADMIT invocations while partition credits
-        last, running each to its first ``yield`` so its operand-fetch
-        WQEs are armed *deferred*; (2) one shared FLUSH executes every
-        armed fetch together with earlier invocations' armed write-backs
-        (one descriptor table where the serial path needed two); (3)
-        RESUME each fetched invocation — compute + arm write-back. The
-        write-back then rides the NEXT round's flush, overlapped with the
-        next admissions' fetches."""
+        last (round-robin across the group's kernels, so every handler
+        of a mixed-class dispatch round is represented), running each to
+        its first ``yield`` so its operand-fetch WQEs are armed
+        *deferred*; (2) one shared FLUSH executes every armed fetch
+        together with earlier invocations' armed write-backs (one
+        descriptor table where the serial path needed two — and, for a
+        group, one table for ALL handlers' gathers); (3) RESUME each
+        fetched invocation — compute + arm write-back. The write-back
+        then rides the NEXT round's flush, overlapped with the next
+        admissions' fetches.
+
+        Scratch isolation: with ``pipeline_depth > 1`` each admission
+        holds a partition credit exactly as before. A depth-1 group
+        (several handlers on an unpartitioned block) admits one
+        invocation per kernel per round on the shared bump allocator —
+        safe because the cursor only advances until the group drains."""
+        # a lone kernel keeps the historical window (half the partitions
+        # fetch while half drain); a group widens it so every handler
+        # can arm its fetch before the shared flush
+        use_parts = self.pipeline_depth > 1
+        window = (self._stage_window if len(kernels) == 1
+                  else max(len(kernels), self._stage_window))
         stages: deque = deque()          # fetch armed, awaiting CQEs
         wb: List[_Invocation] = []       # fn done, write-back in flight
-        while k.control_fifo.not_empty or stages or wb:
+        while any(k.control_fifo.not_empty for k in kernels) or stages \
+                or wb:
             wb = [i for i in wb if not i.finalized]
-            while (k.control_fifo.not_empty
-                   and len(stages) < self._stage_window):
-                if not self._free_parts:
+            ready: deque = deque(k for k in kernels
+                                 if k.control_fifo.not_empty)
+            while ready and len(stages) < window:
+                if use_parts and not self._free_parts:
                     self._lp["credit_waits"] += 1
                     break
+                k = ready.popleft()
                 msg = k.control_fifo.pop()
-                inv = self._admit_invocation(k, msg,
-                                             self._free_parts.pop(0))
+                part = self._free_parts.pop(0) if use_parts else None
+                inv = self._admit_invocation(k, msg, part)
+                if k.control_fifo.not_empty:
+                    ready.append(k)      # round-robin across the group
                 ctx = LCContext(self, inv)
                 try:
                     res = k.fn(ctx, *msg.args)

@@ -27,6 +27,7 @@ staged over the "PCIe" path, dev_mem regions live in the device pool.
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -36,7 +37,7 @@ from repro.core.rdma.doorbell import coalesce_plan, schedule_plan
 from repro.core.rdma.transport import make_transport
 from repro.core.rdma.verbs import (
     CQE, CQEStatus, MemoryRegion, Opcode, ONE_SIDED, Placement, QueuePair,
-    TWO_SIDED, WQE, next_qp_num, next_rkey,
+    RKEY_BASE, TWO_SIDED, WQE, next_qp_num,
 )
 
 
@@ -67,6 +68,11 @@ class RDMAEngine:
         self._sched_state: Dict = {}
         self.transport = make_transport(n_peers, pool_size, dtype, mesh)
         self.mesh = self.transport.mesh
+        # Per-engine rkey allocation: every engine hands out the same
+        # deterministic sequence from RKEY_BASE regardless of what other
+        # engines (or earlier tests) registered — rkeys are meaningful
+        # only within the engine that minted them.
+        self._rkey_counter = itertools.count(RKEY_BASE)
         self.mrs: Dict[int, MemoryRegion] = {}
         self.qps: Dict[int, QueuePair] = {}
         self._armed: List[QueuePair] = []   # doorbell arrival order
@@ -90,18 +96,22 @@ class RDMAEngine:
         # credit waits, flushes that overlapped a fetch with an earlier
         # write-back) — engine-wide: every LookasideBlock on this engine
         # accumulates into the same dict (like qp_service).
+        # "dispatch" is the match→action plane's per-class ledger
+        # (streaming.dispatch.StreamDispatcher): dispatch_rounds /
+        # dispatch_mixed_rounds plus per-handler pkts/bursts/wqes.
         self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0,
                       "coalesced_wqes": 0, "flushes": 0,
                       "qp_service": {}, "lc_service": {}, "lc_wqes": 0,
                       "qp_bytes": {}, "qp_latency_us": {},
-                      "lc_pipeline": {},
+                      "lc_pipeline": {}, "dispatch": {},
                       "transport": self.transport.stats}
 
     # ------------------------------------------------------------------ MRs
     def register_mr(self, peer: int, base: int, length: int,
                     placement: Placement = Placement.DEV_MEM) -> MemoryRegion:
         assert 0 <= base and base + length <= self.pool_size, "MR out of pool"
-        mr = MemoryRegion(next_rkey(), peer, base, length, placement)
+        mr = MemoryRegion(next(self._rkey_counter), peer, base, length,
+                          placement)
         self.mrs[mr.rkey] = mr
         return mr
 

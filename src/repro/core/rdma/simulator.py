@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import json
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.rdma.cost_model import (LC_OFFLOAD, LCOffload, PAPER_HW,
                                         PaperHW, STREAMING_RX, StreamingRX,
@@ -179,6 +179,19 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
         out["lc_pipeline_overlapped_flushes"] = float(
             lp.get("overlapped_flushes", 0))
         out["lc_pipeline_credit_waits"] = float(lp.get("credit_waits", 0))
+    # Match→action dispatch plane: per-class routing ledger (how the
+    # handler mix shares service rounds — mixed rounds are the ones
+    # whose operand gathers shared a descriptor table across handlers).
+    dp = stats.get("dispatch") or {}
+    if dp.get("dispatch_rounds"):
+        out["dispatch_rounds"] = float(dp["dispatch_rounds"])
+        out["dispatch_mixed_rounds"] = float(
+            dp.get("dispatch_mixed_rounds", 0))
+        out["dispatch_mixed_share"] = (out["dispatch_mixed_rounds"]
+                                       / out["dispatch_rounds"])
+        out["dispatch_classes"] = float(len(dp.get("classes", {})))
+        for name, ledger in dp.get("classes", {}).items():
+            out[f"dispatch_pkts_{name}"] = float(ledger.get("pkts", 0))
     # Fairness term: engine.stats carries the per-QP service ledger.
     qp_service = stats.get("qp_service")
     if qp_service:
@@ -400,6 +413,112 @@ def simulate_streaming_rx(n_pkts: int, burst: int = 32,
     return out
 
 
+def simulate_dispatch(n_pkts: int, shares: Sequence[float] = (0.5, 0.5),
+                      burst: int = 32, pipeline_depth: int = 4,
+                      qp_location: str = "dev_mem",
+                      hw: PaperHW = PAPER_HW,
+                      srx: StreamingRX = STREAMING_RX) -> Dict[str, float]:
+    """Model the match→action dispatch plane: one MIXED-class RX ring
+    whose per-round handler sub-bursts share a flush, vs N SEPARATE
+    single-class rings each drained independently (the PR-4 shape per
+    class — what you'd build without a dispatch plane).
+
+    ``shares`` splits ``n_pkts`` across the handler classes. Mixed: each
+    service round runs one sub-burst per backlogged class; the round's
+    operand gathers execute as ONE descriptor table, so the fixed
+    per-flush engine cost (first WQE fetch) is paid once per ROUND, and
+    with ``pipeline_depth >= 2`` round *i+1*'s gather overlaps round
+    *i*'s compute. Split: every class pays its own per-round fixed costs
+    and pipeline fill — flushes scale with the number of rings.
+
+    The flush counts are the deterministic quantities the benchmark
+    pins: a mixed stream of C backlogged classes takes ``rounds + 1``
+    flushes (one shared fetch table per round + the trailing write-back)
+    where the split layout takes ``sum_i (rounds_i + 1)`` — and a
+    single-class mix (C = 1) reduces exactly to the PR-4 pipelined
+    path's count (flush-count parity).
+    """
+    if n_pkts <= 0 or burst <= 0 or not shares:
+        raise ValueError((n_pkts, burst, shares))
+    total = float(sum(shares))
+    # largest-remainder apportionment: floors + extras to the biggest
+    # fractional parts, so counts always sum to n_pkts and never go
+    # negative however skewed the shares are
+    raw = [s / total * n_pkts for s in shares]
+    counts = [int(c) for c in raw]
+    order = sorted(range(len(shares)), key=lambda i: raw[i] - counts[i],
+                   reverse=True)
+    for j in range(n_pkts - sum(counts)):
+        counts[order[j % len(counts)]] += 1
+    counts = [c for c in counts if c > 0]
+    assert sum(counts) == n_pkts, (counts, n_pkts)
+    o = _request_overheads(hw, qp_location)
+
+    def per_burst(n_burst: int) -> Tuple[float, float]:
+        """(gather+writeback move, compute) seconds of one sub-burst."""
+        data = n_burst * srx.slot_bytes / hw.line_rate
+        meta = n_burst * srx.meta_bytes / hw.line_rate
+        move = (o["fetch_next"] + data) + (o["fetch_next"] + meta)
+        compute = n_burst * srx.parse_per_pkt_s + srx.status_fifo_s
+        return move, compute
+
+    # -- mixed: one ring, per-round sub-bursts share the flush ----------
+    rounds_per_class = [-(-c // burst) for c in counts]
+    rounds = max(rounds_per_class)
+    mixed_flushes = rounds + 1           # + trailing write-back flush
+    left = list(counts)
+    round_costs = []                     # (move, compute) per round
+    for _ in range(rounds):
+        move = o["fetch_first"]          # ONE shared descriptor fetch
+        compute = 0.0
+        for i, c in enumerate(left):
+            if c <= 0:
+                continue
+            b = min(c, burst)
+            m, cp = per_burst(b)
+            move += m
+            compute += cp
+            left[i] = c - b
+        round_costs.append((move, compute))
+    if pipeline_depth >= 2:              # gather i+1 overlaps compute i
+        mixed_total = round_costs[0][0]
+        for (m, _), (_, cp_prev) in zip(round_costs[1:], round_costs):
+            mixed_total += max(m, cp_prev)
+        mixed_total += round_costs[-1][1]
+    else:
+        mixed_total = sum(m + cp for m, cp in round_costs)
+
+    # -- split: one single-class ring per class, drained independently --
+    split_total = 0.0
+    split_flushes = 0
+    for c, r in zip(counts, rounds_per_class):
+        split_flushes += r + 1
+        bursts = [min(burst, c - j * burst) for j in range(r)]
+        costs = [(o["fetch_first"] + per_burst(b)[0], per_burst(b)[1])
+                 for b in bursts]
+        if pipeline_depth >= 2:
+            t = costs[0][0]
+            for (m, _), (_, cp_prev) in zip(costs[1:], costs):
+                t += max(m, cp_prev)
+            t += costs[-1][1]
+        else:
+            t = sum(m + cp for m, cp in costs)
+        split_total += t
+
+    return {
+        "classes": float(len(counts)),
+        "rounds": float(rounds),
+        "mixed_flushes": float(mixed_flushes),
+        "split_flushes": float(split_flushes),
+        "flush_ratio": split_flushes / mixed_flushes,
+        "mixed_pkts_per_s": n_pkts / mixed_total,
+        "split_pkts_per_s": n_pkts / split_total,
+        "mixed_speedup_vs_split": split_total / mixed_total,
+        "mixed_p99_us": mixed_total * 1e6,
+        "split_p99_us": split_total * 1e6,
+    }
+
+
 def simulate_dma(nbytes: int, direction: str = "read",
                  hw: PaperHW = PAPER_HW) -> float:
     """§VI-B.1: host<->dev_mem DMA throughput over QDMA AXI4-MM (bytes/s)."""
@@ -424,7 +543,8 @@ def run_testcase(path_or_dict) -> Dict:
     Testcase schema::
 
       {"name": str, "op": "read"|"write"|"dma"|"host_access"
-                          |"fair_schedule"|"lc_offload"|"streaming_rx",
+                          |"fair_schedule"|"lc_offload"|"streaming_rx"
+                          |"dispatch",
        "payload": int, "batch": int, "qp_location": "host_mem"|"dev_mem",
        "golden": {"throughput_gbps": float | null,
                   "latency_us": float | null,
@@ -446,6 +566,11 @@ def run_testcase(path_or_dict) -> Dict:
     ``pipeline_depth``/``qp_location``) and pin the ControlMsg-vs-ring
     and serial-vs-pipelined throughput/latency metrics of
     ``simulate_streaming_rx``.
+
+    ``dispatch`` testcases carry ``n_pkts``/``shares`` (per-class packet
+    shares, plus optional ``burst``/``pipeline_depth``/``qp_location``)
+    and pin the mixed-ring-vs-split-rings flush and throughput metrics
+    of ``simulate_dispatch``.
     """
     tc = (json.load(open(path_or_dict)) if isinstance(path_or_dict, str)
           else path_or_dict)
@@ -489,6 +614,14 @@ def run_testcase(path_or_dict) -> Dict:
             qp_location=tc.get("qp_location", "dev_mem"))
         out.update(r)
         out["latency_us"] = r["ring_pipelined_p99_us"]
+    elif op == "dispatch":
+        r = simulate_dispatch(
+            tc["n_pkts"], shares=tc.get("shares", (0.5, 0.5)),
+            burst=tc.get("burst", 32),
+            pipeline_depth=tc.get("pipeline_depth", 4),
+            qp_location=tc.get("qp_location", "dev_mem"))
+        out.update(r)
+        out["latency_us"] = r["mixed_p99_us"]
     else:
         raise ValueError(op)
 

@@ -6,6 +6,10 @@ from repro.core.streaming.compress import (  # noqa: F401
     compress_bucket, compressed_all_reduce, decompress_bucket,
     init_error_state,
 )
+from repro.core.streaming.dispatch import (  # noqa: F401
+    ACTION_DROP, ACTION_RDMA, ACTION_STREAM, MatchEntry, MatchTable,
+    StreamDispatcher,
+)
 from repro.core.streaming.rx_ring import (  # noqa: F401
     RXRing, percentile_us, record_latency_us,
 )

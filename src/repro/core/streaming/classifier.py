@@ -3,12 +3,23 @@
 Two levels, mirroring the paper:
 
 * **Byte level** — ``classify_headers`` runs the Pallas ``packet_parser``
-  kernel over packed RoCEv2-style headers (the P4 example verbatim).
+  kernel over packed RoCEv2-style headers (the P4 example verbatim) and
+  returns the FULL parsed field vector per packet
+  (``packet_parser.FIELD_NAMES`` columns, opcode/dest_qp unmasked) — the
+  match keys of the dispatch plane's ``MatchTable``.
 * **Descriptor level** — in the training/serving system, "packets" are
   transfer descriptors. ``TrafficRouter`` classifies each descriptor into
   a traffic class and routes it to the offloaded ICI path (RDMA engine)
   or the host path — the paper's RDMA vs non-RDMA split, extended with
   the classes a training system actually carries.
+
+The packet-level RDMA-vs-ring split is no longer hardwired: the router
+consults a ``MatchTable`` whose DEFAULT instance is exactly the old
+behavior expressed as two table rows — ``is_rdma == 1 → ACTION_RDMA``
+plus a catch-all ``ACTION_STREAM`` default — and a custom table routes
+each ingress packet to a per-class handler kernel instead (the packet
+lands in the RX ring tagged with its handler id, and the egress
+``StreamDispatcher`` demuxes).
 """
 from __future__ import annotations
 
@@ -19,6 +30,8 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.core.streaming.dispatch import (ACTION_DROP, ACTION_RDMA,
+                                           ACTION_STREAM, MatchTable)
 from repro.kernels import ops as kops
 
 
@@ -45,43 +58,66 @@ class TransferDesc:
     meta: tuple = ()
 
 
+#: The seed RDMA-vs-ring split as a match→action table: RoCEv2 traffic
+#: to the engine, everything else streamed untagged (the attached
+#: dispatcher's default handler claims it).
+def default_ingress_table() -> MatchTable:
+    return MatchTable(default=ACTION_STREAM).add(ACTION_RDMA, is_rdma=1)
+
+
 class TrafficRouter:
     """Routes descriptors to registered path handlers and keeps per-class
     byte/dispatch counters (the NIC's telemetry role).
 
     With an ``rx_ring`` attached it is also the §IV-D MAC ingress:
-    ``ingest_packets`` classifies raw headers byte-level and lands the
-    non-RDMA share in the streaming-compute RX ring — no ControlMsg per
-    packet — while RoCEv2 traffic is counted toward the RDMA engine
-    path."""
+    ``ingest_packets`` parses raw headers byte-level and consults the
+    match→action ``table`` per packet — ``ACTION_RDMA`` rows count
+    toward the RDMA engine, ``ACTION_DROP`` rows are discarded, handler
+    rows land in the RX ring tagged with the handler's workload id (the
+    egress ``StreamDispatcher`` demuxes the ring by that tag). No table
+    given → ``default_ingress_table()``, the seed RDMA-vs-ring split."""
 
-    def __init__(self, rx_ring=None):
+    def __init__(self, rx_ring=None, table: Optional[MatchTable] = None):
         self.rx_ring = rx_ring
+        self.table = table if table is not None else default_ingress_table()
         self.handlers: Dict[str, Callable[[List[TransferDesc]], None]] = {}
         self.counters: Dict[TrafficClass, Dict[str, int]] = {
             tc: {"bytes": 0, "count": 0} for tc in TrafficClass}
         self.pkt_counters = {"rdma": 0, "streamed": 0, "dropped": 0,
                              "backpressure": 0}
+        # per-action ingress ledger ("rdma"/"drop"/"stream"/handler id):
+        # finer-grained than the 4-key pkt_counters outcome view. On a
+        # table without ACTION_DROP rows, pkt_counters' drop/
+        # backpressure entries equal the ring's rx_ring_* refusal
+        # counters; table-level drops also land in pkt_counters
+        # ["dropped"] (split out here under "drop") without touching
+        # the ring.
+        self.class_counters: Dict[object, int] = {}
 
     def ingest_packets(self, headers: np.ndarray) -> Dict[str, int]:
-        """MAC-side packet ingress (paper §IV-D): split RDMA from
-        non-RDMA traffic with the streaming classifier kernel. RDMA
-        packets belong to the RDMA engine (counted here); non-RDMA
-        packets land in the RX ring for the streaming-compute kernel.
+        """MAC-side packet ingress (paper §IV-D): parse headers with the
+        streaming classifier kernel, then match→action each packet.
         When the ring refuses a packet the outcome matches the ring's
         policy — ``dropped`` (lost) vs ``backpressure`` (retryable after
         a drain) — so router and ring/transport telemetry agree. With no
-        ring attached the streamed share is dropped. Returns this call's
+        ring attached the streamed share is dropped. Table-level
+        ``ACTION_DROP`` packets also count as ``dropped`` (see
+        ``class_counters["drop"]`` for the split). Returns this call's
         counts."""
         headers = np.asarray(headers)
-        meta = classify_headers(headers)
+        fields = classify_headers(headers)
+        actions = self.table.classify(fields)
         out = {"rdma": 0, "streamed": 0, "dropped": 0, "backpressure": 0}
         refused = ("dropped" if self.rx_ring is None
                    or self.rx_ring.policy == "drop" else "backpressure")
-        for h, is_rdma in zip(headers, meta[:, 0]):
-            if is_rdma:
+        for h, act in zip(headers, actions):
+            self.class_counters[act] = self.class_counters.get(act, 0) + 1
+            if act == ACTION_RDMA:
                 out["rdma"] += 1
-            elif self.rx_ring is not None and self.rx_ring.push(h):
+            elif act == ACTION_DROP:
+                out["dropped"] += 1
+            elif self.rx_ring is not None and self.rx_ring.push(
+                    h, cls=act if isinstance(act, int) else None):
                 out["streamed"] += 1
             else:
                 out[refused] += 1
@@ -111,19 +147,25 @@ class TrafficRouter:
 
 
 def classify_headers(headers: np.ndarray) -> np.ndarray:
-    """(n, 64) uint8 RoCEv2-style headers -> (n, 4) metadata via the
-    streaming Pallas kernel [is_rdma, opcode, dest_qp, class]."""
-    return np.asarray(kops.classify_packets(jax.numpy.asarray(headers)))
+    """(n, 64) uint8 RoCEv2-style headers -> (n, N_FIELDS) FULL parsed
+    field vectors via the streaming Pallas kernel
+    (``packet_parser.FIELD_NAMES`` order: is_rdma, opcode, dest_qp, cls,
+    eth_type, ip_proto, udp_dport, udp_sport — opcode/dest_qp raw, so a
+    match table can split non-RDMA classes by port)."""
+    return np.asarray(kops.classify_packet_fields(
+        jax.numpy.asarray(headers)))
 
 
-def make_roce_header(opcode: int, dest_qp: int,
-                     is_rdma: bool = True) -> np.ndarray:
+def make_roce_header(opcode: int, dest_qp: int, is_rdma: bool = True,
+                     dport: Optional[int] = None) -> np.ndarray:
     """Build one synthetic 64-byte header (test/bench stimulus generator —
-    the packet_gen.py analogue)."""
+    the packet_gen.py analogue). ``dport`` overrides the UDP destination
+    port (default: 4791 RoCEv2 / 80 non-RDMA) — the knob multi-class
+    dispatch stimuli steer their match tables with."""
     h = np.zeros(64, np.uint8)
     h[12], h[13] = 0x08, 0x00                     # IPv4
     h[23] = 17                                    # UDP
-    port = 4791 if is_rdma else 80
+    port = dport if dport is not None else (4791 if is_rdma else 80)
     h[36], h[37] = port >> 8, port & 0xFF
     h[42] = opcode
     h[47], h[48], h[49] = ((dest_qp >> 16) & 0xFF, (dest_qp >> 8) & 0xFF,

@@ -1,0 +1,284 @@
+"""Match→action dispatch plane: per-packet handler routing (paper §IV-D).
+
+The paper's programmable compute blocks are multi-tenant: developers drop
+RTL/HLS/**Vitis Networking P4** accelerators into the streaming path, and
+each one sees its own slice of ingress traffic. ``MatchTable`` is the
+software analogue of that Vitis Networking P4 block — a prioritized
+match→action table whose keys are the PARSED HEADER FIELD VECTORS the
+``packet_parser`` kernel extracts (``FIELD_NAMES`` columns: is_rdma,
+opcode, dest_qp, cls, eth_type, ip_proto, udp_dport, udp_sport) and whose
+actions name the handler kernel a packet belongs to (FPsPIN's per-packet
+handler dispatch; RoCE BALBOA's per-service pipelines on the RDMA
+datapath are the same shape):
+
+  * the INGRESS consults the table once per packet
+    (``TrafficRouter.ingest_packets``): the built-in ``ACTION_RDMA``
+    action hands the packet to the RDMA engine, ``ACTION_DROP`` discards
+    it, an int action tags the packet with that handler's workload id
+    and lands it in the RX ring;
+  * the EGRESS side (``StreamDispatcher``) drains the ring in bursts and
+    DEMUXES the claimed slots into per-handler sub-bursts — each
+    sub-burst is one generator-kernel invocation through the shared
+    ``LookasideBlock``, and all handlers' operand-fetch READ gathers for
+    one service round are armed deferred so they execute as ONE
+    shape-bucketed descriptor table per flush. Per-class result rows are
+    RDMA-written to class-mirrored meta rings (one per handler, slot
+    index mirrored from the packet ring).
+
+Matching semantics: every field condition of an entry must hold
+(``lo <= field <= hi``; exact matches are degenerate ranges, unnamed
+fields are wildcards). The highest-priority matching entry wins; among
+equal priorities the most recently added wins. No match → the table's
+``default`` action — the PR-4 single-parser path is exactly a table
+whose default is that one parser's workload id.
+
+Per-class telemetry lands in ``engine.stats["dispatch"]``
+(``dispatch_rounds`` / ``dispatch_mixed_rounds`` plus per-handler
+``pkts`` / ``bursts`` / ``wqes`` ledgers) and is threaded through
+``simulator.predict_from_stats``; ``simulate_dispatch`` models the
+mixed-ring-vs-split-rings economics the ``bench_dispatch`` benchmark
+executes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.lookaside.control import ControlMsg
+from repro.kernels.packet_parser import FIELD_NAMES
+
+#: Built-in actions: hand the packet to the RDMA engine / discard it.
+#: Any int action is a handler workload id (a registered LC kernel).
+ACTION_RDMA = "rdma"
+ACTION_DROP = "drop"
+#: Ingress-only action: land the packet in the ring untagged (the
+#: attached dispatcher's default handler claims it) — the seed
+#: ``TrafficRouter`` behavior re-expressed as a table default.
+ACTION_STREAM = "stream"
+
+Action = Union[int, str]
+
+_FIELD_INDEX = {name: i for i, name in enumerate(FIELD_NAMES)}
+
+
+@dataclass(frozen=True)
+class MatchEntry:
+    """One prioritized match→action row.
+
+    ``fields`` is a tuple of ``(name, lo, hi)`` inclusive range
+    conditions over the parsed field vector; all must hold for the entry
+    to match (absent fields are wildcards, exact matches have
+    ``lo == hi``)."""
+    action: Action
+    fields: Tuple[Tuple[str, int, int], ...] = ()
+    priority: int = 0
+
+    def __post_init__(self):
+        for name, lo, hi in self.fields:
+            if name not in _FIELD_INDEX:
+                raise KeyError(
+                    f"unknown match field {name!r}; parsed fields are "
+                    f"{FIELD_NAMES}")
+            if lo > hi:
+                raise ValueError(f"empty range for {name}: [{lo}, {hi}]")
+
+
+class MatchTable:
+    """Prioritized field-match table over parsed header vectors — the
+    Vitis Networking P4 block of the dispatch plane."""
+
+    def __init__(self, entries: Sequence[MatchEntry] = (),
+                 default: Action = ACTION_DROP):
+        self.default = default
+        self.entries: List[MatchEntry] = list(entries)
+
+    def add(self, action: Action, priority: int = 0,
+            **matches) -> "MatchTable":
+        """Append one entry: ``table.add(PARSER_WID, udp_dport=9000)`` or
+        ranges ``table.add(wid, opcode=(6, 11))``. Returns self (chains).
+        """
+        fields = []
+        for name, cond in matches.items():
+            lo, hi = cond if isinstance(cond, tuple) else (cond, cond)
+            fields.append((name, int(lo), int(hi)))
+        self.entries.append(MatchEntry(action, tuple(fields), priority))
+        return self
+
+    def classify(self, fields: np.ndarray) -> List[Action]:
+        """Vectorized match of (n, N_FIELDS) parsed vectors → one action
+        per packet. Entries apply in ascending (priority, insertion)
+        order, later applications overwriting — so the highest priority
+        wins, ties going to the most recently added entry."""
+        fields = np.asarray(fields)
+        n = fields.shape[0]
+        out = np.zeros(n, np.int64)          # indices into actions list
+        actions: List[Action] = [self.default]
+        order = sorted(range(len(self.entries)),
+                       key=lambda i: (self.entries[i].priority, i))
+        for i in order:
+            e = self.entries[i]
+            mask = np.ones(n, bool)
+            for name, lo, hi in e.fields:
+                col = fields[:, _FIELD_INDEX[name]]
+                mask &= (col >= lo) & (col <= hi)
+            actions.append(e.action)
+            out[mask] = len(actions) - 1
+        return [actions[i] for i in out]
+
+    def match(self, field_vec) -> Action:
+        """Single parsed field vector → action."""
+        return self.classify(np.asarray(field_vec)[None])[0]
+
+    @property
+    def handler_ids(self) -> List[int]:
+        """Every distinct int (handler) action, table order, default
+        last."""
+        out: List[int] = []
+        for e in self.entries:
+            if isinstance(e.action, int) and e.action not in out:
+                out.append(e.action)
+        if isinstance(self.default, int) and self.default not in out:
+            out.append(self.default)
+        return out
+
+
+@dataclass
+class _Handler:
+    """One registered handler kernel's egress binding: where its
+    class-mirrored output ring lives (rows at
+    ``out_base + (seq % depth) * row_words``, row width owned by the
+    kernel)."""
+    workload_id: int
+    out_peer: int
+    out_rkey: int
+    out_base: int
+
+
+class StreamDispatcher:
+    """Drains one RX ring into per-handler sub-bursts (the egress half of
+    the dispatch plane).
+
+    One ``service()`` call runs claim ROUNDS — per round, each handler
+    claims up to ``burst`` of its oldest pending slots (per-handler FIFO,
+    wrap splits included) and gets one ControlMsg invocation enqueued —
+    then drives ALL touched kernels through one
+    ``LookasideBlock.service_group`` pass, where every handler's
+    operand-fetch gather is armed deferred and executed in one shared
+    shape-bucketed descriptor table per flush. The default handler (an
+    int table default) additionally claims untagged and unknown-class
+    slots — P4 default-action semantics — while a non-handler default
+    sweeps them as counted drops so the ring can never wedge.
+    """
+
+    def __init__(self, block, ring, table: MatchTable, burst: int = 32):
+        self.block = block
+        self.ring = ring
+        self.table = table
+        self.burst = max(1, int(burst))
+        self.handlers: Dict[int, _Handler] = {}
+        stats = block.engine.stats.setdefault("dispatch", {})
+        for key in ("dispatch_rounds", "dispatch_mixed_rounds",
+                    "dispatch_dropped_pkts"):
+            stats.setdefault(key, 0)
+        stats.setdefault("classes", {})
+        self._stats = stats
+
+    def register_handler(self, workload_id: int, out_peer: int,
+                         out_rkey: int, out_base: int) -> _Handler:
+        """Bind a registered LC kernel as a handler with its
+        class-mirrored output ring base (re-registering rebinds)."""
+        if workload_id not in self.block.kernels:
+            raise KeyError(f"workload {workload_id:#x} not registered on "
+                           "the block")
+        h = _Handler(workload_id, out_peer, out_rkey, out_base)
+        self.handlers[workload_id] = h
+        name = self.block.kernels[workload_id].name
+        self._stats["classes"].setdefault(
+            name, {"pkts": 0, "bursts": 0, "wqes": 0})
+        return h
+
+    # ------------------------------------------------------------ matching
+    def _matcher(self, wid: int) -> Callable[[Optional[int]], bool]:
+        """Slot-tag predicate of one handler: its own workload id, plus —
+        for the table-default handler — untagged and orphaned tags."""
+        if self.table.default == wid:
+            others = frozenset(w for w in self.handlers if w != wid)
+            return lambda cls: cls not in others
+        return lambda cls: cls == wid
+
+    def _enqueue(self, h: _Handler, n: int) -> int:
+        """Claim one sub-burst for a handler and enqueue its invocation
+        (fetch spans ride the ControlMsg; slot release and latency-stamp
+        hooks ride the block's per-message lifecycle)."""
+        block, ring = self.block, self.ring
+        seqs, spans, stamps = ring.claim(n, self._matcher(h.workload_id))
+        msg = ControlMsg(h.workload_id,
+                         (block.peer, ring.mr.rkey, ring.base,
+                          h.out_peer, h.out_rkey, h.out_base,
+                          tuple(spans)),
+                         tag=block.stats["dispatched"])
+        st = block.dispatch(msg, service=False)
+        if st is not None:               # control FIFO backpressure:
+            block.service_group([h.workload_id])    # drain, re-dispatch
+            st = block.dispatch(msg, service=False)
+            if st is not None:           # FIFO still full after a full
+                raise RuntimeError(      # drain: nothing can progress
+                    f"stream burst rejected twice: {st.detail}")
+        hooks = block._hooks.setdefault(id(msg), {})
+        hooks["on_fetched"] = (lambda ring=ring, seqs=seqs:
+                               ring.complete_seqs(seqs))
+        hooks["on_finalized"] = (lambda ring=ring, stamps=stamps:
+                                 ring.record_status(stamps))
+        ledger = self._stats["classes"][
+            block.kernels[h.workload_id].name]
+        ledger["pkts"] += n
+        ledger["bursts"] += 1
+        ledger["wqes"] += len(spans)
+        return n
+
+    def _sweep_orphans(self) -> None:
+        """Slots whose tag no REGISTERED handler claims would wedge the
+        ring (head stuck behind them forever): claim and free them as
+        counted drops instead. A registered default handler's matcher
+        already covers untagged and unknown tags, so nothing can orphan;
+        an int default that was never registered must NOT suppress the
+        sweep."""
+        if self.table.default in self.handlers:
+            return                       # default handler claims them
+        matchers = [self._matcher(w) for w in self.handlers]
+        orphan = lambda cls: not any(m(cls) for m in matchers)  # noqa: E731
+        n = self.ring.available_for(orphan)
+        if n:
+            seqs, _, _ = self.ring.claim(n, orphan)
+            self.ring.drop_seqs(seqs)    # swept, NOT consumed
+            self._stats["dispatch_dropped_pkts"] += n
+
+    # ------------------------------------------------------------- service
+    def service(self, max_bursts: Optional[int] = None) -> int:
+        """One dispatch drain: claim rounds over the handler mix, then
+        one shared service pass. Returns packets consumed by handlers
+        (``max_bursts`` caps sub-bursts claimed this call)."""
+        consumed = 0
+        bursts = 0
+        while max_bursts is None or bursts < max_bursts:
+            claimed_classes = 0
+            for wid, h in self.handlers.items():
+                if max_bursts is not None and bursts >= max_bursts:
+                    break
+                avail = self.ring.available_for(self._matcher(wid))
+                if not avail:
+                    continue
+                consumed += self._enqueue(h, min(avail, self.burst))
+                bursts += 1
+                claimed_classes += 1
+            if claimed_classes:
+                self._stats["dispatch_rounds"] += 1
+                if claimed_classes > 1:
+                    self._stats["dispatch_mixed_rounds"] += 1
+            else:
+                break
+        self._sweep_orphans()
+        self.block.service_group(list(self.handlers))
+        return consumed

@@ -28,12 +28,22 @@ into ``transport.stats`` (the ``rx_ring_*`` keys) so the engine's one
 stats surface shows ring health. Ring-to-status latency is histogrammed
 per packet in pow2-µs ceiling buckets when the streaming kernel's
 StatusMsg lands (cf. ORCA's µs-scale accounting).
+
+Dispatch-plane extension (FPsPIN-style match→handler routing): slots are
+CLASS-TAGGED — the ingress table stamps each packet with its handler id
+at push time — and claims grew a per-class form: ``claim(n, match=...)``
+picks the oldest ``n`` pending slots the predicate accepts, so a
+``StreamDispatcher`` can carve one mixed-class ring into per-handler
+sub-bursts that each stay FIFO in arrival order even when interleaved
+with other classes or split by the wrap boundary. Claimed slots complete
+out of order (``complete_seqs``) — the head cursor only advances over
+the finished prefix, so an unfinished older claim still guards its slots
+from the producer.
 """
 from __future__ import annotations
 
 import time
-from collections import deque
-from typing import Deque, List, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -93,11 +103,14 @@ class RXRing:
         self.mr = engine.register_mr(peer, self.base,
                                      self.depth * self.slot_bytes)
         self._head = 0            # freed for the producer
-        self._pend = 0            # claimed by an in-flight burst
         self._tail = 0            # produced
-        self._stamps: Deque[float] = deque()   # push times of [pend, tail)
+        # seq -> (cls, push stamp): produced, not yet claimed. Plain dict
+        # (insertion-ordered) — per-class claims remove from the middle.
+        self._pending: Dict[int, Tuple[Optional[int], float]] = {}
+        # seq -> done flag: claimed, not yet freed past the head cursor
+        self._claimed: Dict[int, bool] = {}
         self.stats = {"pushed": 0, "dropped": 0, "backpressure": 0,
-                      "consumed": 0, "wrap_bursts": 0,
+                      "consumed": 0, "swept": 0, "wrap_bursts": 0,
                       "peak_occupancy": 0, "latency_us": {}}
 
     # ------------------------------------------------------------ cursors
@@ -109,7 +122,15 @@ class RXRing:
     @property
     def available(self) -> int:
         """Slots a consumer burst can still claim."""
-        return self._tail - self._pend
+        return len(self._pending)
+
+    def available_for(self, match: Optional[Callable[[Optional[int]], bool]]
+                      ) -> int:
+        """Pending slots whose class tag the predicate accepts
+        (``None`` = all)."""
+        if match is None:
+            return len(self._pending)
+        return sum(1 for cls, _ in self._pending.values() if match(cls))
 
     @property
     def space(self) -> int:
@@ -119,10 +140,12 @@ class RXRing:
         return self.base + (seq % self.depth) * self.slot_bytes
 
     # ----------------------------------------------------------- producer
-    def push(self, header) -> bool:
-        """Land one packet in the next slot (the MAC arrival). Returns
-        False when the ring is full: the packet is dropped
-        (``policy="drop"``) or refused for retry (``"backpressure"``)."""
+    def push(self, header, cls: Optional[int] = None) -> bool:
+        """Land one packet in the next slot (the MAC arrival), tagged
+        with its dispatch class (the handler id the ingress match table
+        resolved; ``None`` = unclassified). Returns False when the ring
+        is full: the packet is dropped (``policy="drop"``) or refused
+        for retry (``"backpressure"``)."""
         t = self.engine.transport.stats
         if self.occupancy >= self.depth:
             key = "dropped" if self.policy == "drop" else "backpressure"
@@ -133,8 +156,8 @@ class RXRing:
         assert header.shape[0] == self.slot_bytes, header.shape
         self.engine.write_buffer(self.peer, self.slot_addr(self._tail),
                                  header)
+        self._pending[self._tail] = (cls, time.perf_counter())
         self._tail += 1
-        self._stamps.append(time.perf_counter())
         self.stats["pushed"] += 1
         t["rx_ring_pushed"] += 1
         occ = self.occupancy
@@ -147,32 +170,90 @@ class RXRing:
         return True
 
     # ----------------------------------------------------------- consumer
+    def claim(self, n: int,
+              match: Optional[Callable[[Optional[int]], bool]] = None
+              ) -> Tuple[List[int], List[Tuple[int, int]], List[float]]:
+        """Claim the oldest ``n`` pending slots whose class tag ``match``
+        accepts (``None`` = any class — the whole-ring burst). Returns
+        the claimed seqs, their contiguous ``(addr, count)`` spans in
+        arrival order (a run splits at the wrap boundary and at gaps
+        left by other classes' slots), and the claimed packets' push
+        stamps. Claimed slots stay allocated until ``complete_seqs`` /
+        ``complete_consume`` (the gather must land before the producer
+        may overwrite them)."""
+        seqs: List[int] = []
+        for seq, (cls, _) in self._pending.items():
+            if match is None or match(cls):
+                seqs.append(seq)
+                if len(seqs) == n:
+                    break
+        assert 0 < n == len(seqs), (n, len(seqs))
+        stamps = [self._pending[s][1] for s in seqs]
+        for s in seqs:
+            del self._pending[s]
+            self._claimed[s] = False
+        return seqs, self._spans(seqs), stamps
+
     def begin_consume(self, n: int) -> Tuple[List[Tuple[int, int]],
                                              List[float]]:
-        """Claim the oldest ``n`` available slots for one burst. Returns
-        their contiguous ``(addr, count)`` spans (two when the burst
-        wraps) and the claimed packets' push stamps. Claimed slots stay
-        allocated until ``complete_consume`` (the gather must land before
-        the producer may overwrite them)."""
-        assert 0 < n <= self.available, (n, self.available)
-        s0 = self._pend
-        idx0 = s0 % self.depth
-        first = min(n, self.depth - idx0)
-        spans = [(self.slot_addr(s0), first)]
-        if n > first:
-            spans.append((self.base, n - first))
-            self.stats["wrap_bursts"] += 1
-        self._pend += n
-        stamps = [self._stamps.popleft() for _ in range(n)]
+        """Class-blind burst claim (the single-parser path): oldest ``n``
+        available slots, ``(spans, stamps)``."""
+        _, spans, stamps = self.claim(n)
         return spans, stamps
 
+    def _spans(self, seqs: List[int]) -> List[Tuple[int, int]]:
+        """Contiguous (addr, count) spans of a claimed seq list: runs of
+        consecutive seqs, split where the ring wraps (a wrap split is
+        counted in ``wrap_bursts``; class gaps are not)."""
+        spans: List[Tuple[int, int]] = []
+        wrapped = False
+        start = prev = seqs[0]
+        for s in seqs[1:]:
+            if s == prev + 1 and s % self.depth != 0:
+                prev = s
+                continue
+            wrapped |= (s == prev + 1)       # consecutive, but wrapped
+            spans.append((self.slot_addr(start), prev - start + 1))
+            start = prev = s
+        spans.append((self.slot_addr(start), prev - start + 1))
+        if wrapped:
+            self.stats["wrap_bursts"] += 1
+        return spans
+
+    def _free_seqs(self, seqs: List[int]) -> None:
+        """Release claimed slots back toward the producer. The head
+        cursor advances over the finished prefix only — an unfinished
+        older claim keeps the producer out of its slots."""
+        for s in seqs:
+            assert self._claimed.get(s) is False, (s, self._claimed.get(s))
+            self._claimed[s] = True
+        while self._claimed.get(self._head):
+            del self._claimed[self._head]
+            self._head += 1
+
+    def complete_seqs(self, seqs: List[int]) -> None:
+        """Free specific claimed slots whose gather landed (the packets
+        were PROCESSED — they count as consumed)."""
+        self._free_seqs(seqs)
+        self.stats["consumed"] += len(seqs)
+        self.engine.transport.stats["rx_ring_consumed"] += len(seqs)
+
+    def drop_seqs(self, seqs: List[int]) -> None:
+        """Free specific claimed slots WITHOUT processing them (the
+        dispatch plane's orphan sweep): counted as ``swept`` — never as
+        consumed — and mirrored to ``rx_ring_swept``, so processed vs
+        discarded packets stay distinguishable in every ledger."""
+        self._free_seqs(seqs)
+        self.stats["swept"] += len(seqs)
+        self.engine.transport.stats["rx_ring_swept"] += len(seqs)
+
     def complete_consume(self, n: int) -> None:
-        """Free ``n`` claimed slots back to the producer — called once
-        their gather READ CQEs have landed."""
-        assert self._head + n <= self._pend, (self._head, n, self._pend)
-        self._head += n
-        self.stats["consumed"] += n
-        self.engine.transport.stats["rx_ring_consumed"] += n
+        """Free the ``n`` oldest claimed slots back to the producer —
+        called once their gather READ CQEs have landed."""
+        todo = sorted(s for s, done in self._claimed.items()
+                      if not done)[:n]
+        assert len(todo) == n, (n, len(todo))
+        self.complete_seqs(todo)
 
     def record_status(self, stamps: List[float]) -> None:
         """Histogram ring-to-status latency for one finalized burst."""

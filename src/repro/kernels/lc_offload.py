@@ -7,17 +7,32 @@ verbs traffic), compute on the NIC — the Pallas kernels that map onto the
 TPU MXU/VPU — and RDMA-write the result back. The host only exchanges
 ``ControlMsg``/``StatusMsg``; the data never crosses PCIe.
 
-ControlMsg argument conventions (all ints):
+ControlMsg argument conventions (all ints unless noted):
 
   ``systolic_mm``   : (remote_peer, rkey, a_addr, b_addr, out_addr, m, k, n)
   ``packet_parser`` : (remote_peer, rkey, pkts_addr, n_pkts, out_addr)
-  ``packet_parser_stream`` (built by ``LookasideBlock.stream``, not the
-  host): (ring_peer, ring_rkey, ring_base, out_peer, out_rkey, out_base,
-  a0, c0, a1, c1) — the burst's ≤ 2 contiguous RX-ring slot spans.
+  stream handlers (built by the dispatch plane's ``StreamDispatcher``,
+  not the host): (ring_peer, ring_rkey, ring_base, out_peer, out_rkey,
+  out_base, spans) — ``spans`` is the sub-burst's tuple of contiguous
+  RX-ring ``(addr, count)`` slot spans in arrival order (≤ 2 for a
+  whole-ring burst; more when a mixed-class claim interleaves with
+  other handlers' slots).
+
+Stream handlers registered here (the dispatch-plane handler mix):
+
+  ``packet_parser_stream`` — the ctrl-class handler: parse each slot's
+  RoCEv2-style header into a 4-word meta row (one row per slot in the
+  class-mirrored meta ring).
+  ``quantize_stream``      — the bulk-class handler: int8-quantize each
+  slot's 64-lane payload (``kernels/quantize_stream.py``, the Streaming
+  Compute block's in-flight gradient-compression kernel — see
+  ``streaming/compress.py`` for its error-feedback system role), writing
+  a 65-word row per slot (64 int8 values as f32 + the fp32 scale).
 
 Correctness contract: outputs are byte-identical to the host-side oracles
 in ``repro.kernels.ref`` on the same operand bytes (for the matmul, with
-a single K-block so the fp32 accumulation order matches the oracle's).
+a single K-block so the fp32 accumulation order matches the oracle's;
+for the quantizer, ``ref_quantize`` row-wise).
 """
 from __future__ import annotations
 
@@ -27,11 +42,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.packet_parser import HDR_BYTES, parse_packets
+from repro.kernels.quantize_stream import quantize_stream
 from repro.kernels.systolic_mm import systolic_mm
 
 MM_WORKLOAD = 0x10
 PARSER_WORKLOAD = 0x11
 STREAM_PARSER_WORKLOAD = 0x12
+STREAM_QUANT_WORKLOAD = 0x13
+
+#: one quantize_stream output row: 64 int8 lanes (as f32) + 1 fp32 scale
+QUANT_ROW = HDR_BYTES + 1
 
 
 def _next_pow2(n: int) -> int:
@@ -114,18 +134,48 @@ def lc_packet_parser(ctx, remote_peer, rkey, pkts_addr, n_pkts, out_addr,
     return out_addr
 
 
+def _gather_spans(ctx, ring_peer, ring_rkey, in_loc, spans,
+                  unit: int) -> int:
+    """Post the loopback READ gather of a sub-burst's ring spans into
+    contiguous scratch (``unit`` pool words per slot). Returns total
+    words gathered. The WQEs are POSTED only — the caller arms them
+    deferred so the whole service round shares one descriptor table."""
+    off = 0
+    for addr, cnt in spans:
+        if cnt:
+            ctx.read_remote(ring_peer, ring_rkey, addr, in_loc + off,
+                            cnt * unit)
+            off += cnt * unit
+    return off
+
+
+def _scatter_rows(ctx, ring_base, out_peer, out_rkey, out_base, out_loc,
+                  spans, row: int) -> None:
+    """RDMA-WRITE each span's result rows to the handler's class-mirrored
+    output ring at the matching slot indices (``row`` words per slot)."""
+    off = 0
+    for addr, cnt in spans:
+        if cnt:
+            slot0 = (addr - ring_base) // HDR_BYTES
+            ctx.write_remote(out_peer, out_rkey, out_loc + off,
+                             out_base + slot0 * row, cnt * row)
+            off += cnt * row
+
+
 def lc_packet_parser_stream(ctx, ring_peer, ring_rkey, ring_base,
-                            out_peer, out_rkey, out_base,
-                            a0, c0, a1, c1, *, interpret: bool = True):
-    """Streaming ``packet_parser`` entry (§IV-D): parse one RX-ring burst.
+                            out_peer, out_rkey, out_base, spans, *,
+                            interpret: bool = True):
+    """Streaming ``packet_parser`` handler (§IV-D): parse one sub-burst.
 
     A GENERATOR kernel — the two phases around the ``yield`` are what the
-    pipelined service loop overlaps across invocations:
+    pipelined service loop overlaps across invocations (and, in a
+    dispatch group, across HANDLERS):
 
-      fetch    — gather the burst's (≤ 2, wrap-split) contiguous ring
-                 spans into contiguous scratch with loopback READ WQEs on
-                 the kernel's own QP, armed deferred (one descriptor
-                 table per flush, shared with any armed host traffic);
+      fetch    — gather the sub-burst's contiguous ring spans into
+                 contiguous scratch with loopback READ WQEs on the
+                 kernel's own QP, armed deferred (one descriptor table
+                 per flush, shared with the other handlers' gathers and
+                 any armed host traffic);
       compute  — parse the headers (the same Pallas kernel as the
                  ControlMsg path, padded to a pow2 packet bucket so
                  steady-state bursts reuse a handful of programs) and
@@ -135,16 +185,11 @@ def lc_packet_parser_stream(ctx, ring_peer, ring_rkey, ring_base,
     Byte-contract: identical rows to ``lc_packet_parser`` (and the
     ``kernels/ref.py`` oracle) for the same header bytes.
     """
-    n_pkts = c0 + c1
+    n_pkts = sum(cnt for _, cnt in spans)
     nbytes = n_pkts * HDR_BYTES
     in_loc = ctx.alloc(nbytes)
     meta_loc = ctx.alloc(n_pkts * 4)
-    off = 0
-    for addr, cnt in ((a0, c0), (a1, c1)):
-        if cnt:
-            ctx.read_remote(ring_peer, ring_rkey, addr, in_loc + off,
-                            cnt * HDR_BYTES)
-            off += cnt * HDR_BYTES
+    _gather_spans(ctx, ring_peer, ring_rkey, in_loc, spans, HDR_BYTES)
     ctx.commit(wait=False)       # armed: the service loop flushes
     yield                        # ...and resumes once the gather lands
     if ctx.failed:
@@ -153,13 +198,66 @@ def lc_packet_parser_stream(ctx, ring_peer, ring_rkey, ring_base,
     pkts = ctx.load(in_loc, nbytes).reshape(n_pkts, HDR_BYTES)
     meta = _parse_bucketed(pkts, interpret)
     ctx.store(meta_loc, np.asarray(meta, np.float32).reshape(-1))
-    off = 0
-    for addr, cnt in ((a0, c0), (a1, c1)):
-        if cnt:
-            slot0 = (addr - ring_base) // HDR_BYTES
-            ctx.write_remote(out_peer, out_rkey, meta_loc + off,
-                             out_base + slot0 * 4, cnt * 4)
-            off += cnt * 4
+    _scatter_rows(ctx, ring_base, out_peer, out_rkey, out_base, meta_loc,
+                  spans, 4)
+    ctx.commit(wait=ctx.eager_writeback)
+    return out_base
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_quant(bp: int, interpret: bool):
+    """Jitted per pow2 row bucket like ``_stream_parser``: steady-state
+    bulk streaming must not re-trace the Pallas quantizer per burst."""
+    import jax
+    return jax.jit(functools.partial(quantize_stream, chunk=HDR_BYTES,
+                                     interpret=interpret))
+
+
+def _quant_bucketed(x: np.ndarray, interpret: bool):
+    """Pad a (n, 64) payload batch to its pow2 row bucket, quantize with
+    the cached jitted program, slice the live rows (each row quantizes
+    independently with its own scale, so padding never changes a live
+    row's bytes)."""
+    n = x.shape[0]
+    bp = _next_pow2(n)
+    padded = np.zeros((bp, HDR_BYTES), np.float32)
+    padded[:n] = x
+    q, s = _stream_quant(bp, interpret)(jnp.asarray(padded))
+    return q[:n], s[:n]
+
+
+def lc_quantize_stream(ctx, ring_peer, ring_rkey, ring_base,
+                       out_peer, out_rkey, out_base, spans, *,
+                       interpret: bool = True):
+    """Streaming bulk-class handler: int8-quantize one sub-burst's
+    payload slots in flight (the Streaming Compute block's gradient-
+    compression role — ``quantize_stream`` per 64-lane slot chunk).
+
+    Same generator shape as the parser handler (fetch → ``yield`` →
+    compute/write-back); each slot's output row is its 64 int8 values
+    (as f32 — exact) followed by its fp32 max-abs scale, written to the
+    class-mirrored output ring at the matching slot index.
+
+    Byte-contract: identical to ``ref.ref_quantize`` row-wise on the
+    same slot bytes.
+    """
+    n_slots = sum(cnt for _, cnt in spans)
+    nwords = n_slots * HDR_BYTES
+    in_loc = ctx.alloc(nwords)
+    out_loc = ctx.alloc(n_slots * QUANT_ROW)
+    _gather_spans(ctx, ring_peer, ring_rkey, in_loc, spans, HDR_BYTES)
+    ctx.commit(wait=False)       # armed: the service loop flushes
+    yield                        # ...and resumes once the gather lands
+    if ctx.failed:
+        raise RuntimeError(
+            f"ring gather failed: {ctx.failed[0].status.value}")
+    x = ctx.load(in_loc, nwords).reshape(n_slots, HDR_BYTES)
+    q, s = _quant_bucketed(x, interpret)
+    rows = np.concatenate([np.asarray(q, np.float32),
+                           np.asarray(s, np.float32)], axis=1)
+    ctx.store(out_loc, rows.reshape(-1))
+    _scatter_rows(ctx, ring_base, out_peer, out_rkey, out_base, out_loc,
+                  spans, QUANT_ROW)
     ctx.commit(wait=ctx.eager_writeback)
     return out_base
 
@@ -167,7 +265,7 @@ def lc_packet_parser_stream(ctx, ring_peer, ring_rkey, ring_base,
 def register_default_kernels(block, interpret: bool = True,
                              weight: int = 1):
     """Register the paper's example offload kernels on a block (the two
-    ControlMsg kernels plus the streaming-RX parser entry)."""
+    ControlMsg kernels plus the dispatch plane's stream handler mix)."""
     block.register(MM_WORKLOAD,
                    functools.partial(lc_systolic_mm, interpret=interpret),
                    "systolic_mm", weight=weight)
@@ -178,4 +276,8 @@ def register_default_kernels(block, interpret: bool = True,
                    functools.partial(lc_packet_parser_stream,
                                      interpret=interpret),
                    "packet_parser_stream", weight=weight)
+    block.register(STREAM_QUANT_WORKLOAD,
+                   functools.partial(lc_quantize_stream,
+                                     interpret=interpret),
+                   "quantize_stream", weight=weight)
     return block

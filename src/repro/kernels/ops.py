@@ -120,3 +120,15 @@ def classify_packets(pkts: jax.Array) -> jax.Array:
     bp = _next_mult(n, 256)
     pp = _pad_to(pkts, 0, bp)
     return _pp.parse_packets(pp, block_p=bp, interpret=_interpret())[:n]
+
+
+@jax.jit
+def classify_packet_fields(pkts: jax.Array) -> jax.Array:
+    """(n, 64) uint8 headers -> (n, N_FIELDS) raw parsed field vectors
+    (``packet_parser.FIELD_NAMES`` order) — what the match→action
+    dispatch plane matches its table entries against."""
+    n = pkts.shape[0]
+    bp = _next_mult(n, 256)
+    pp = _pad_to(pkts, 0, bp)
+    return _pp.parse_packet_fields(pp, block_p=bp,
+                                   interpret=_interpret())[:n]

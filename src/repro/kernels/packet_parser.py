@@ -28,11 +28,22 @@ ROCE_UDP_PORT = 4791
 CLS_NON_RDMA, CLS_SEND, CLS_WRITE, CLS_READ_REQ, CLS_READ_RESP, CLS_ACK, \
     CLS_OTHER = range(7)
 
+#: Column order of the FULL parsed field vector (``parse_packet_fields``).
+#: The dispatch plane's MatchTable matches entries against these columns
+#: by name; opcode/dest_qp are RAW here (not masked by is_rdma) so
+#: non-RDMA traffic stays distinguishable — a match→action table must be
+#: able to split non-RDMA classes by port/proto, which the 4-column meta
+#: view erases.
+FIELD_NAMES = ("is_rdma", "opcode", "dest_qp", "cls",
+               "eth_type", "ip_proto", "udp_dport", "udp_sport")
+N_FIELDS = len(FIELD_NAMES)
 
-def _parse_block(pkts):
-    """pkts: (bp, HDR_BYTES) int32 (0..255) -> (bp, 4) int32."""
+
+def _raw_fields(pkts):
+    """pkts: (bp, HDR_BYTES) int32 (0..255) -> (bp, N_FIELDS) raw fields."""
     eth_type = pkts[:, 12] * 256 + pkts[:, 13]
     ip_proto = pkts[:, 23]
+    udp_sport = pkts[:, 34] * 256 + pkts[:, 35]
     udp_dport = pkts[:, 36] * 256 + pkts[:, 37]
     opcode = pkts[:, 42]
     dest_qp = pkts[:, 47] * 65536 + pkts[:, 48] * 256 + pkts[:, 49]
@@ -48,13 +59,28 @@ def _parse_block(pkts):
     cls = jnp.where(opcode == 17, CLS_ACK, cls)
     cls = jnp.where(is_rdma == 0, CLS_NON_RDMA, cls)
 
-    return jnp.stack(
-        [is_rdma, opcode * is_rdma, dest_qp * is_rdma, cls], axis=-1)
+    return jnp.stack([is_rdma, opcode, dest_qp, cls,
+                      eth_type, ip_proto, udp_dport, udp_sport], axis=-1)
+
+
+def _parse_block(pkts):
+    """pkts: (bp, HDR_BYTES) int32 (0..255) -> (bp, 4) int32 meta rows
+    (the streaming-parser byte contract: opcode/dest_qp masked to 0 on
+    non-RDMA packets)."""
+    f = _raw_fields(pkts)
+    is_rdma = f[:, 0]
+    return jnp.stack([is_rdma, f[:, 1] * is_rdma, f[:, 2] * is_rdma,
+                      f[:, 3]], axis=-1)
 
 
 def _parser_kernel(pkt_ref, meta_ref):
     pkts = pkt_ref[...].astype(jnp.int32)
     meta_ref[...] = _parse_block(pkts)
+
+
+def _fields_kernel(pkt_ref, fields_ref):
+    pkts = pkt_ref[...].astype(jnp.int32)
+    fields_ref[...] = _raw_fields(pkts)
 
 
 def parse_packets(pkts: jax.Array, *, block_p: int = 256,
@@ -69,5 +95,23 @@ def parse_packets(pkts: jax.Array, *, block_p: int = 256,
         in_specs=[pl.BlockSpec((block_p, HDR_BYTES), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((block_p, 4), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((n, 4), jnp.int32),
+        interpret=interpret,
+    )(pkts)
+
+
+def parse_packet_fields(pkts: jax.Array, *, block_p: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """pkts: (n, HDR_BYTES) uint8, n % block_p == 0 -> (n, N_FIELDS) int32
+    raw field vectors in ``FIELD_NAMES`` order — the match→action
+    dispatch plane's view of the parsed headers."""
+    n, hb = pkts.shape
+    assert hb == HDR_BYTES, f"expected {HDR_BYTES}-byte headers, got {hb}"
+    assert n % block_p == 0, (n, block_p)
+    return pl.pallas_call(
+        _fields_kernel,
+        grid=(n // block_p,),
+        in_specs=[pl.BlockSpec((block_p, HDR_BYTES), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_p, N_FIELDS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, N_FIELDS), jnp.int32),
         interpret=interpret,
     )(pkts)

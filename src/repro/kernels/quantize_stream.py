@@ -13,13 +13,24 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+
+#: scale = amax * (1/127) as an EXPLICIT fp32 multiply: XLA rewrites a
+#: division by the constant 127 into a reciprocal multiply under jit but
+#: not eagerly (1 ULP apart), so spelling the multiply out keeps the
+#: kernel bit-identical to ``ref.ref_quantize`` in every compilation
+#: mode — the byte contract the streaming quantize handler is gated on.
+#: (A plain Python float of the exact fp32 reciprocal: Pallas kernels
+#: cannot capture traced array constants.)
+INV_QMAX = float(np.float32(1.0) / np.float32(127.0))
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
     x = x_ref[...].astype(jnp.float32)                 # (1, chunk)
     amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
-    scale = jnp.where(amax == 0.0, 1.0, amax / 127.0)  # (1, 1)
+    scale = jnp.where(amax == 0.0, 1.0, amax * INV_QMAX)  # (1, 1)
     q = jnp.clip(jnp.round(x / scale), -127, 127)
     q_ref[...] = q.astype(jnp.int8)
     s_ref[...] = scale

@@ -8,7 +8,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.packet_parser import _parse_block
+from repro.kernels.packet_parser import _parse_block, _raw_fields
 
 
 def ref_matmul(x: jax.Array, y: jax.Array, out_dtype=None) -> jax.Array:
@@ -43,10 +43,14 @@ def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def ref_quantize(x: jax.Array):
-    """x: (n, chunk) -> (int8 (n, chunk), scales (n, 1))."""
+    """x: (n, chunk) -> (int8 (n, chunk), scales (n, 1)). The scale is
+    an explicit ``amax * (1/127)`` multiply, mirroring the kernel — a
+    ``/127.0`` would be strength-reduced to that multiply under jit but
+    not eagerly, breaking eager-oracle-vs-jitted-kernel bit parity."""
+    from repro.kernels.quantize_stream import INV_QMAX
     xf = x.astype(jnp.float32)
     amax = jnp.max(jnp.abs(xf), axis=-1, keepdims=True)
-    scale = jnp.where(amax == 0.0, 1.0, amax / 127.0)
+    scale = jnp.where(amax == 0.0, 1.0, amax * INV_QMAX)
     q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
     return q, scale
 
@@ -57,3 +61,9 @@ def ref_dequantize(q: jax.Array, scales: jax.Array, out_dtype=jnp.float32):
 
 def ref_parse_packets(pkts: jax.Array) -> jax.Array:
     return _parse_block(pkts.astype(jnp.int32))
+
+
+def ref_parse_fields(pkts: jax.Array) -> jax.Array:
+    """(n, 64) headers -> (n, N_FIELDS) raw field vectors (the dispatch
+    plane's match keys; opcode/dest_qp unmasked)."""
+    return _raw_fields(pkts.astype(jnp.int32))

@@ -86,18 +86,46 @@ class TestInjectedRegression:
         msgs = check_gate(self.GATE, rec, base)
         assert len(msgs) == 2
 
-    def test_committed_schema_gates_all_four_benches(self):
+    def test_committed_schema_gates_all_benches(self):
         """The live schema must cover every committed BENCH baseline,
         with the compile-count keys gated at zero tolerance."""
         names = {g.baseline for g in ci_gate.GATES}
         assert names == {"BENCH_transport.json", "BENCH_fairness.json",
-                         "BENCH_lc_offload.json", "BENCH_streaming.json"}
+                         "BENCH_lc_offload.json", "BENCH_streaming.json",
+                         "BENCH_dispatch.json"}
         for g in ci_gate.GATES:
             compile_rules = [r for r in g.rules if "compile" in r.key]
             assert compile_rules, f"{g.name} gates no compile counts"
             assert all(r.direction == "<=" and r.tolerance == 0.0
                        for r in compile_rules)
             assert g.runner is not None
+
+    def test_dispatch_gate_pins_parity_and_flush_keys(self):
+        """The dispatch gate's scale-invariant schema: steady-state
+        compile counts at zero tolerance, per-class byte parity exact,
+        flush merging + PR-4 one-entry parity — and injecting a
+        regression into each key fails on exactly that key."""
+        g = next(g for g in ci_gate.GATES if g.name == "dispatch")
+        keys = {r.key for r in g.rules}
+        assert {"warm_descriptor_compiles", "warm_qdma_compiles",
+                "parser_parity", "quant_parity",
+                "flush_ratio_split_over_mixed",
+                "pr4_flush_parity"} <= keys
+        parity = next(r for r in g.rules if r.key == "pr4_flush_parity")
+        assert parity.direction == "==" and parity.tolerance == 0.0
+        base = {"warm_descriptor_compiles": 0, "warm_qdma_compiles": 0,
+                "parser_parity": True, "quant_parity": True,
+                "flush_ratio_split_over_mixed": 1.33,
+                "pr4_flush_parity": 1.0}
+        assert check_gate(g, dict(base), base) == []
+        for key, bad in (("warm_descriptor_compiles", 2),
+                         ("parser_parity", False),
+                         ("quant_parity", False),
+                         ("flush_ratio_split_over_mixed", 0.9),
+                         ("pr4_flush_parity", 1.5)):
+            rec = dict(base, **{key: bad})
+            msgs = check_gate(g, rec, base)
+            assert len(msgs) == 1 and key in msgs[0], (key, msgs)
 
     def test_gate_catches_regression_against_committed_baseline(self):
         """End-to-end on the real schema: take each committed baseline,
