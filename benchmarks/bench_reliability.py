@@ -1,0 +1,283 @@
+# Lossy-fabric reliability (the PR-6 tentpole claims): a seeded
+# FaultInjector at the transport boundary drops/duplicates/delays/
+# corrupts WQE deliveries while the PSN-tracked go-back-N layer
+# retransmits. The claims this bench pins:
+#
+#   * at 10% drop (plus dup/delay/corrupt) the final pool is
+#     BYTE-IDENTICAL to the fault-free run and per-QP CQE order equals
+#     posting order;
+#   * retransmitted WQEs re-enter the SAME pow2 descriptor-table shape
+#     buckets — ZERO new XLA compiles at steady state (zero-tolerance
+#     CI gate);
+#   * retransmit storms are billed to their owner QP: Jain fairness
+#     among the innocent host QPs stays >= 0.9 while a victim QP
+#     retransmits under 35% targeted loss;
+#   * retry exhaustion against a stalled peer surfaces TERMINAL ERROR
+#     CQEs (never exceptions, never hangs) and `recover_qp` resumes
+#     traffic on a fresh PSN epoch.
+#
+# Writes BENCH_reliability.json for cross-PR tracking.
+import json
+import time
+
+import numpy as np
+
+POOL = 1 << 13
+REGION = 512
+N_QPS = 3
+DEPTH = 24
+BUDGET = 8
+
+
+def _build(scheduler="drr", injector=None, config=None, seed=11):
+    from repro.core.rdma import RDMAEngine
+    eng = RDMAEngine(n_peers=2, pool_size=POOL, scheduler=scheduler,
+                     flush_budget=BUDGET)
+    if injector is not None:
+        eng.install_fault_injector(injector, config)
+    rng = np.random.default_rng(seed)
+    eng.write_buffer(0, 0, rng.standard_normal(POOL).astype(np.float32))
+    return eng, rng
+
+
+def _post_workload(eng, rng, n_qps=N_QPS, depth=DEPTH):
+    """n_qps QPs, each writing `depth` random spans into its own
+    disjoint destination region (cross-QP reordering under DELAY faults
+    must not mask divergence)."""
+    from repro.core.rdma import Opcode, WQE
+    qps, posted = [], {}
+    for q in range(n_qps):
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, q * REGION, REGION)
+        qps.append(qp)
+        posted[q] = []
+        for i in range(depth):
+            ln = int(rng.integers(1, 48))
+            eng.post_send(qp, WQE(
+                Opcode.WRITE, qp.qp_num, wr_id=i * n_qps + q,
+                local_addr=int(rng.integers(0, POOL - ln)),
+                remote_addr=q * REGION + int(rng.integers(0, REGION - ln)),
+                length=ln, rkey=mr.rkey))
+            posted[q].append(i * n_qps + q)
+        eng.ring_sq_doorbell(qp, defer=True)
+    return qps, posted
+
+
+def _drive(eng, qps, max_flushes=800):
+    polled = {q: [] for q in range(len(qps))}
+    flushes = 0
+    for _ in range(max_flushes):
+        eng.flush_doorbells()
+        flushes += 1
+        for q, qp in enumerate(qps):
+            polled[q].extend(eng.poll_cq(qp, 256))
+        relia = eng._reliability
+        if not any(qp.pending_count for qp in qps) and (
+                relia is None or relia.outstanding() == 0):
+            break
+    return polled, flushes
+
+
+def _parity_scenario():
+    """10% drop + 5% dup + 5% delay + 3% corrupt vs the perfect wire:
+    byte parity, CQE order, flush overhead, and the compile ledger."""
+    from repro.core.rdma import FaultInjector, ReliabilityConfig
+    eng, rng = _build()
+    qps, posted = _post_workload(eng, rng)
+    polled, clean_flushes = _drive(eng, qps)
+    clean_pool = np.asarray(eng.transport.pool).copy()
+
+    injector = FaultInjector(42, drop=0.10, duplicate=0.05, delay=0.05,
+                             corrupt=0.03)
+    feng, frng = _build(injector=injector,
+                        config=ReliabilityConfig(retry_cnt=16))
+    # warm the descriptor shape buckets with one clean pass, then
+    # snapshot the compile count: the faulted pass (same workload,
+    # same buckets) must compile NOTHING new
+    wqps, _ = _post_workload(feng, frng)
+    _drive(feng, wqps)
+    warm_compiles = feng.stats["transport"].get("compiles", 0)
+    fqps, _ = _post_workload(feng, np.random.default_rng(11 + 1))
+    # replay the EXACT clean workload for parity: rebuild with same rng
+    feng2, frng2 = _build(injector=FaultInjector(
+        42, drop=0.10, duplicate=0.05, delay=0.05, corrupt=0.03),
+        config=ReliabilityConfig(retry_cnt=16))
+    f2qps, f2posted = _post_workload(feng2, frng2)
+    f2polled, faulted_flushes = _drive(feng2, f2qps)
+    faulted_pool = np.asarray(feng2.transport.pool)
+
+    parity = bool(np.array_equal(faulted_pool, clean_pool))
+    order_ok = all(
+        [c.wr_id for c in f2polled[q]] == f2posted[q]
+        and all(c.status.value == "success" for c in f2polled[q])
+        for q in range(N_QPS))
+
+    # warm-compile claim on feng: drive the second (faulted) workload
+    _drive(feng, fqps)
+    warm_delta = feng.stats["transport"].get("compiles", 0) - warm_compiles
+    rel = feng2.stats["reliability"]
+    return {
+        "parity_10pct_drop": parity,
+        "cqe_order_ok": bool(order_ok),
+        "clean_flushes": clean_flushes,
+        "faulted_flushes": faulted_flushes,
+        "flush_overhead_ratio": faulted_flushes / max(1, clean_flushes),
+        "warm_descriptor_compiles": int(warm_delta),
+        "ledger": {k: rel[k] for k in
+                   ("psn_assigned", "acks", "naks", "timeouts",
+                    "retransmits", "dropped", "corrupt", "delayed",
+                    "dup_suppressed")},
+    }
+
+
+def _fairness_scenario():
+    """Targeted loss on ONE victim QP (`only_qps`): retransmits are
+    billed to the victim's DRR deficit, so service among the INNOCENT
+    host QPs stays near-even."""
+    from repro.core.rdma import FaultInjector, ReliabilityConfig
+    from repro.core.rdma.cost_model import jain_fairness_index
+    eng, rng = _build(seed=7)
+    n_qps = 4
+    # victim is created first -> lowest qp_num among this engine's QPs
+    qps, _ = _post_workload(eng, rng, n_qps=n_qps, depth=16)
+    victim = qps[0]
+    eng.install_fault_injector(
+        FaultInjector(9, drop=0.35, only_qps=[victim.qp_num]),
+        ReliabilityConfig(retry_cnt=32))
+    _drive(eng, qps)
+    service = eng.stats["qp_service"]
+    innocents = [service[qp.qp_num] for qp in qps[1:]]
+    rel = eng.stats["reliability"]
+    return {
+        "victim_service": service[victim.qp_num],
+        "innocent_service": innocents,
+        "host_jain_while_victim_retx": jain_fairness_index(innocents),
+        "victim_retransmits": rel["retransmits"],
+    }
+
+
+def _recovery_scenario():
+    """Stall a peer outright: bounded retries end in a terminal
+    RETRY_EXC_ERROR + WR_FLUSH_ERROR drain (CQEs, not exceptions), and
+    recover_qp resumes traffic after the stall lifts."""
+    from repro.core.rdma import (CQEStatus, FaultInjector, Opcode,
+                                 QPState, RDMAEngine, ReliabilityConfig,
+                                 WQE)
+    eng = RDMAEngine(n_peers=2, pool_size=POOL, flush_budget=BUDGET)
+    injector = eng.install_fault_injector(
+        FaultInjector(1), ReliabilityConfig(retry_cnt=4))
+    qp = eng.create_qp(0, 1)
+    mr = eng.register_mr(1, 0, 256)
+    injector.stall_peer(1)
+    for i in range(4):
+        eng.post_send(qp, WQE(Opcode.WRITE, qp.qp_num, wr_id=i,
+                              local_addr=0, remote_addr=8 * i, length=8,
+                              rkey=mr.rkey))
+    eng.ring_sq_doorbell(qp, defer=True)
+    cqes, ok = [], True
+    try:
+        for _ in range(100):
+            eng.flush_doorbells()
+            cqes.extend(eng.poll_cq(qp))
+            if len(cqes) >= 4 and qp.state is QPState.ERROR:
+                break
+    except Exception:                    # the claim: CQEs, NOT exceptions
+        ok = False
+    terminal = (ok and len(cqes) == 4
+                and cqes[0].status is CQEStatus.RETRY_EXC_ERROR
+                and all(c.status is CQEStatus.WR_FLUSH_ERROR
+                        for c in cqes[1:]))
+    injector.unstall_peer(1)
+    eng.recover_qp(qp)
+    eng.write_buffer(0, 0, np.full(8, 6.0, np.float32))
+    eng.post_send(qp, WQE(Opcode.WRITE, qp.qp_num, wr_id=9, local_addr=0,
+                          remote_addr=0, length=8, rkey=mr.rkey))
+    eng.ring_sq_doorbell(qp)
+    post = eng.poll_cq(qp)
+    recovered = (qp.state is QPState.RTS and len(post) == 1
+                 and post[0].status is CQEStatus.SUCCESS
+                 and bool(np.array_equal(
+                     eng.read_buffer(1, 0, 8),
+                     np.full(8, 6.0, np.float32))))
+    return {
+        "terminal_cqes_not_exceptions": bool(terminal),
+        "recovered_ok": bool(recovered),
+        "qp_errors": eng.stats["reliability"]["qp_errors"],
+        "flushed_wqes": eng.stats["reliability"]["flushed_wqes"],
+    }
+
+
+def run(verbose: bool = True, smoke: bool = True, out_json: str = ""):
+    from repro.core.rdma.simulator import predict_from_stats
+
+    t0 = time.perf_counter()
+    parity = _parity_scenario()
+    fair = _fairness_scenario()
+    recovery = _recovery_scenario()
+
+    # model terms off a representative faulted run
+    from repro.core.rdma import FaultInjector, ReliabilityConfig
+    meng, mrng = _build(injector=FaultInjector(5, drop=0.15),
+                        config=ReliabilityConfig(retry_cnt=16))
+    mqps, _ = _post_workload(meng, mrng, n_qps=2, depth=12)
+    _drive(meng, mqps)
+    model = predict_from_stats(meng.stats, payload=REGION)
+
+    rec = {
+        "workload": {"n_qps": N_QPS, "depth": DEPTH, "budget": BUDGET,
+                     "pool": POOL},
+        **parity,
+        "fairness": fair,
+        "recovery": recovery,
+        "model": {k: model[k] for k in
+                  ("retransmits", "goodput_fraction", "retx_overhead_s",
+                   "rnr_backoff_s", "qp_errors") if k in model},
+        "wall_s": time.perf_counter() - t0,
+    }
+
+    if verbose:
+        print(f"reliability_parity,0.0,{parity['parity_10pct_drop']}"
+              f"/order={parity['cqe_order_ok']}"
+              f"/overhead={parity['flush_overhead_ratio']:.2f}x")
+        print(f"reliability_warm_compiles,0.0,"
+              f"{parity['warm_descriptor_compiles']}")
+        print(f"reliability_host_jain,"
+              f"{fair['host_jain_while_victim_retx']:.3f},"
+              f"victim_retx={fair['victim_retransmits']}")
+        print(f"reliability_recovery,0.0,"
+              f"terminal={recovery['terminal_cqes_not_exceptions']}"
+              f"/recovered={recovery['recovered_ok']}")
+
+    # -- acceptance criteria (the PR's hard claims) ----------------------
+    assert parity["parity_10pct_drop"], "pool diverged under 10% drop"
+    assert parity["cqe_order_ok"], "per-QP CQE order != posting order"
+    assert parity["warm_descriptor_compiles"] == 0, (
+        f"retransmit path compiled "
+        f"{parity['warm_descriptor_compiles']} new descriptor shapes")
+    assert parity["flush_overhead_ratio"] <= 4.0, (
+        f"retransmission overhead unbounded: "
+        f"{parity['flush_overhead_ratio']:.1f}x flushes")
+    assert fair["host_jain_while_victim_retx"] >= 0.9, (
+        f"innocent-QP fairness collapsed under a victim's retransmit "
+        f"storm: {fair['host_jain_while_victim_retx']:.3f}")
+    assert recovery["terminal_cqes_not_exceptions"], (
+        "retry exhaustion must surface terminal CQEs, not exceptions")
+    assert recovery["recovered_ok"], "recover_qp did not resume traffic"
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rec, f, indent=2, default=float)
+            f.write("\n")
+        if verbose:
+            print(f"# wrote {out_json}")
+    return rec
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    repo = os.path.join(os.path.dirname(__file__), "..")
+    sys.path.insert(0, repo)                      # for benchmarks.*
+    sys.path.insert(0, os.path.join(repo, "src"))
+    run(out_json="BENCH_reliability.json")

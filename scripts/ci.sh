@@ -7,13 +7,18 @@
 #                    multi-device meshes in child processes)
 #   3. bench gate  — scripts/ci_gate.py runs the smoke benchmarks
 #                    (transport / fairness / lc_offload / streaming /
-#                    dispatch — the match→action plane's mixed-class
-#                    parity + zero-compile + flush-merge claims ride the
-#                    dispatch gate) into ci_artifacts/BENCH_*.ci.json
-#                    and fails on any gated key regressing vs the
-#                    committed BENCH_*.json baselines (per-key schema +
-#                    messages live there; refresh baselines with
-#                    `python scripts/ci_gate.py --update-baselines`).
+#                    dispatch / reliability) into
+#                    ci_artifacts/BENCH_*.ci.json and fails on any gated
+#                    key regressing vs the committed BENCH_*.json
+#                    baselines (per-key schema + messages live there;
+#                    refresh with `scripts/ci_gate.py
+#                    --update-baselines`). The reliability gate is the
+#                    seeded chaos smoke: 10% drop + dup + delay +
+#                    corrupt through the PSN/go-back-N layer must stay
+#                    byte-identical to the perfect wire, compile zero
+#                    new descriptor shapes on the retransmit path, keep
+#                    innocent-QP fairness while a victim retransmits,
+#                    and turn retry exhaustion into terminal CQEs.
 #
 # Usage: scripts/ci.sh
 set -euo pipefail

@@ -148,6 +148,12 @@ def _run_dispatch(out_json: str, smoke: bool = True) -> dict:
                               out_json=out_json)
 
 
+def _run_reliability(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_reliability
+    return bench_reliability.run(verbose=True, smoke=smoke,
+                                 out_json=out_json)
+
+
 GATES: Tuple[Gate, ...] = (
     Gate("transport", "BENCH_transport.json", "BENCH_transport.ci.json",
          rules=(
@@ -201,6 +207,26 @@ GATES: Tuple[Gate, ...] = (
              Rule("pr4_flush_parity", "==", 0.0),
          ),
          runner=_run_dispatch),
+    Gate("reliability", "BENCH_reliability.json",
+         "BENCH_reliability.ci.json",
+         rules=(
+             # seeded chaos smoke: retransmits must reuse the warmed
+             # descriptor shape buckets — zero new compiles, exactly
+             Rule("warm_descriptor_compiles", "<="),
+             # 10% drop + dup + delay + corrupt: byte parity with the
+             # perfect wire, per-QP CQE order = posting order
+             Rule("parity_10pct_drop", "=="),
+             Rule("cqe_order_ok", "=="),
+             # retransmission cost stays bounded (flushes to finish)
+             Rule("flush_overhead_ratio", "<=", 0.5),
+             # a victim QP's retransmit storm is billed to the victim:
+             # innocents' fairness holds
+             Rule("fairness.host_jain_while_victim_retx", ">=", 0.05),
+             # retry exhaustion -> terminal CQEs; recover_qp resumes
+             Rule("recovery.terminal_cqes_not_exceptions", "=="),
+             Rule("recovery.recovered_ok", "=="),
+         ),
+         runner=_run_reliability),
 )
 
 

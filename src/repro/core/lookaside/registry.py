@@ -584,11 +584,18 @@ class LookasideBlock:
     def _drain(self, inv: _Invocation) -> None:
         """Flush the shared engine until this invocation's CQEs land.
         Budgeted flushes may take several rounds; armed host windows get
-        served along the way (the engine is shared)."""
+        served along the way (the engine is shared). With the reliability
+        layer on, a lossy wire parks WQEs for replay (timeout / RNR
+        backoff can sit out many flushes) — un-ACKed windows count as
+        progress, and the retry budget guarantees termination: every
+        parked WQE either delivers or surfaces a terminal error CQE,
+        which retires it from ``inv.outstanding`` like any other."""
         stalls = 0
         while inv.outstanding:
             counts = self.engine.flush_doorbells()
-            if any(counts.values()):
+            relia = getattr(self.engine, "_reliability", None)
+            if any(counts.values()) or (
+                    relia is not None and relia.outstanding() > 0):
                 stalls = 0
             else:
                 stalls += 1

@@ -2,6 +2,11 @@ from repro.core.rdma.doorbell import (  # noqa: F401
     DoorbellCoalescer, coalesce_plan, plan_buckets, schedule_plan,
 )
 from repro.core.rdma.engine import RDMAEngine  # noqa: F401
+from repro.core.rdma.reliability import (  # noqa: F401
+    FaultInjector, FaultProfile, LoadShedder, ReliabilityConfig,
+    ReliabilityLayer,
+)
 from repro.core.rdma.verbs import (  # noqa: F401
-    CQE, CQEStatus, MemoryRegion, Opcode, Placement, QueuePair, WQE,
+    CQE, CQEStatus, MemoryRegion, Opcode, Placement, QPState, QueuePair,
+    WQE,
 )

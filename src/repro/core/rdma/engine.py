@@ -34,10 +34,12 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.rdma.doorbell import coalesce_plan, schedule_plan
+from repro.core.rdma.reliability import (FaultInjector, ReliabilityConfig,
+                                         ReliabilityLayer)
 from repro.core.rdma.transport import make_transport
 from repro.core.rdma.verbs import (
-    CQE, CQEStatus, MemoryRegion, Opcode, ONE_SIDED, Placement, QueuePair,
-    RKEY_BASE, TWO_SIDED, WQE, next_qp_num,
+    CQE, CQEStatus, MemoryRegion, Opcode, ONE_SIDED, Placement, QPState,
+    QueuePair, RKEY_BASE, TWO_SIDED, WQE, next_qp_num,
 )
 
 
@@ -83,6 +85,17 @@ class RDMAEngine:
         self.host_mem: Dict[int, np.ndarray] = {
             p: np.zeros(pool_size, dtype) for p in range(n_peers)}
         self.interrupt_handlers: Dict[int, Callable[[CQE], None]] = {}
+        # engine-wide CQE observers (fire after the per-QP interrupt
+        # handler): the heartbeat bridge listens here for peer liveness
+        self.cqe_observers: List[Callable[[QueuePair, CQE], None]] = []
+        # Reliability layer (PSN tracking / go-back-N / QP state machine)
+        # — OFF by default: the perfect-wire fast path is byte- and
+        # stat-identical to the seed engine. Enabled explicitly or
+        # automatically when a FaultInjector is installed on the
+        # transport. While enabled, SEND-with-empty-RQ becomes an RNR
+        # NAK with exponential backoff (instead of an immediate RNR
+        # CQE), and retry exhaustion drives QPs to ERROR.
+        self._reliability: Optional[ReliabilityLayer] = None
         # "transport" aliases the live transport.stats dict (cache
         # hits/misses, compiles, coalesced WQEs, qdma_* staging counters)
         # — one stats surface. "qp_service" accumulates executed WQEs per
@@ -178,6 +191,50 @@ class RDMAEngine:
         """'Interrupt mode' of the status FIFO: invoke handler on CQE."""
         self.interrupt_handlers[qp.qp_num] = handler
 
+    # ------------------------------------------------------- reliability
+    def enable_reliability(self, config: Optional[ReliabilityConfig] = None
+                           ) -> ReliabilityLayer:
+        """Turn on the RC reliability layer (PSN sequencing, ACK/NAK
+        ledger, go-back-N replay, QP error states). Idempotent unless a
+        new ``config`` is passed. Installing a FaultInjector on the
+        transport enables it automatically at the next flush."""
+        if self._reliability is None or config is not None:
+            self._reliability = ReliabilityLayer(self, config)
+        return self._reliability
+
+    def install_fault_injector(
+            self, injector,
+            config: Optional[ReliabilityConfig] = None) -> FaultInjector:
+        """Convenience: put a seeded FaultInjector at the transport
+        boundary AND enable the reliability layer that survives it
+        (with ``config``'s retry policy, when given). Returns the
+        injector for stall/unstall steering."""
+        self.transport.install_fault_injector(injector)
+        self.enable_reliability(config)
+        return injector
+
+    def recover_qp(self, qp: QueuePair) -> None:
+        """ERROR → drain → RTS with a fresh PSN epoch. No-op on a
+        healthy QP."""
+        if qp.state is QPState.RTS:
+            return
+        self.enable_reliability().recover(qp)
+
+    def fail_peer(self, peer: int) -> List[QueuePair]:
+        """Transition every QP whose connection touches ``peer`` into
+        ERROR and drain it (terminal WR_FLUSH_ERROR CQEs) — the
+        heartbeat bridge's missed-beat action. Returns the failed QPs."""
+        relia = self.enable_reliability()
+        failed = []
+        for qp in self.qps.values():
+            if qp.state is QPState.RTS and peer in (qp.local_peer,
+                                                    qp.remote_peer):
+                qp.state = QPState.ERROR
+                relia.stats["qp_errors"] += 1
+                failed.append(qp)
+        relia.drain_error_qps()
+        return failed
+
     # ------------------------------------------------------------- engine
     def _check_mr(self, rkey: int, peer: int, addr: int,
                   length: int) -> Optional[CQEStatus]:
@@ -196,6 +253,8 @@ class RDMAEngine:
         h = self.interrupt_handlers.get(qp.qp_num)
         if h is not None:
             h(cqe)
+        for obs in self.cqe_observers:
+            obs(qp, cqe)
 
     def flush_doorbells(self) -> Dict[int, int]:
         """Execute armed SQ windows as ONE scheduled transport batch.
@@ -210,11 +269,34 @@ class RDMAEngine:
         # A budgeted flush serves at most flush_budget WQEs from any QP,
         # so the snapshot never copies a deep window's tail (keeps each
         # flush O(budget * n_qps), not O(window depth)).
-        windows = [(qp, qp.pending(self.flush_budget))
-                   for qp in self._armed]
-        windows = [(qp, w) for qp, w in windows if w]
+        relia = self._reliability
+        if relia is None and self.transport.fault_injector is not None:
+            relia = self.enable_reliability()
+        if relia is not None:
+            # tick replay timers + drain ERROR QPs; QPs replaying an
+            # un-ACKed window offer it INSTEAD of fresh WQEs (the send
+            # window is closed until the head is ACKed), charged to the
+            # same qp_num so DRR bills retransmits to their owner
+            relia.begin_flush()
+            retx_len: Dict[int, int] = {}
+            windows = []
+            for qp in self._armed:
+                entries, n_retx = relia.window(qp, self.flush_budget)
+                if entries:
+                    windows.append((qp, entries))
+                    retx_len[qp.qp_num] = n_retx
+            backlog = {qp.qp_num: relia.backlog(qp) for qp, _ in windows}
+        else:
+            retx_len = {}
+            windows = [(qp, qp.pending(self.flush_budget))
+                       for qp in self._armed]
+            windows = [(qp, w) for qp, w in windows if w]
+            backlog = {qp.qp_num: qp.pending_count for qp, _ in windows}
         if not windows:
-            self._armed = []
+            self._armed = [qp for qp in self._armed
+                           if relia is not None
+                           and (qp.pending_count
+                                or relia.pending(qp.qp_num))]
             return {}
         order, counts = schedule_plan(
             [(qp.qp_num, wqes) for qp, wqes in windows],
@@ -225,12 +307,16 @@ class RDMAEngine:
             promote_after=self.promote_after,
             # snapshots are budget-truncated; drr needs the true depth to
             # tell "window drained" from "snapshot exhausted"
-            backlog={qp.qp_num: qp.pending_count for qp, _ in windows})
+            backlog=backlog)
         by_num = {qp.qp_num: qp for qp, _ in windows}
         plan: List[tuple] = []
         completions: List[tuple] = []   # (qp, CQE, remote) after transport
-        for qp_num, wqe in order:
-            self._admit(by_num[qp_num], wqe, plan, completions)
+        if relia is not None:
+            for qp_num, entry in order:
+                relia.process(by_num[qp_num], entry, plan, completions)
+        else:
+            for qp_num, wqe in order:
+                self._admit(by_num[qp_num], wqe, plan, completions)
 
         # Coalesce adjacent contiguous transfers (the descriptor-level
         # doorbell batching), then ONE pre-compiled dispatch for the batch.
@@ -249,15 +335,20 @@ class RDMAEngine:
         for qp_num, n in counts.items():
             if n:
                 qp = by_num[qp_num]
+                # replayed picks never touch the SQ (the reliability
+                # layer owns them); only freshly scheduled WQEs retire
+                # and stamp the doorbell-latency histogram. Service is
+                # charged in FULL — retransmits bill their owner.
+                n_new = n - min(n, retx_len.get(qp_num, 0))
                 hist = self.stats["qp_latency_us"].setdefault(qp_num, {})
-                for _ in range(n):
+                for _ in range(n_new):
                     t0 = qp.arm_times.popleft() if qp.arm_times else now
                     us = (now - t0) * 1e6
                     bucket = 1           # pow2-µs ceiling bucket
                     while bucket < us:
                         bucket <<= 1
                     hist[bucket] = hist.get(bucket, 0) + 1
-                qp.retire(n)
+                qp.retire(n_new)
                 self.stats["qp_service"][qp_num] = (
                     self.stats["qp_service"].get(qp_num, 0) + n)
                 if qp.lc:
@@ -273,27 +364,53 @@ class RDMAEngine:
             self._complete(q, cqe)
             if remote is not None:
                 self._complete(*remote)
-        self._armed = [qp for qp in self._armed if qp.pending_count]
+        self._armed = [qp for qp in self._armed
+                       if qp.pending_count
+                       or (relia is not None and relia.pending(qp.qp_num))]
+        if relia is not None:
+            # refresh the pressure gauge post-delivery: the shedder and
+            # benches read end-of-flush pressure, not start-of-flush
+            relia.stats["retx_pressure"] = relia.outstanding()
         return counts
 
     def _admit(self, qp: QueuePair, wqe: WQE, plan: List[tuple],
                completions: List[tuple]) -> None:
         """Validate one scheduled WQE: append its transfer(s) to ``plan``
-        and its completion(s) to ``completions``."""
+        and its completion(s) to ``completions`` (the perfect-wire path;
+        the reliability layer calls ``_execute_wqe`` directly so it can
+        withhold CQEs and replay)."""
+        status, entries, remote_cqe = self._execute_wqe(qp, wqe)
+        plan.extend(entries)
+        completions.append((qp, CQE(
+            wr_id=wqe.wr_id, qp_num=qp.qp_num, opcode=wqe.opcode,
+            status=status or CQEStatus.SUCCESS,
+            byte_len=wqe.length if status is None else 0,
+            imm=wqe.imm), remote_cqe))
+
+    def _execute_wqe(self, qp: QueuePair, wqe: WQE
+                     ) -> Tuple[Optional[CQEStatus], List[tuple],
+                                Optional[tuple]]:
+        """Validate + lower one WQE arrival at the responder: returns
+        ``(status, plan_entries, remote_cqe)``. Validation runs at every
+        (re)delivery — an MR invalidated while the WQE sat queued or
+        awaited retransmission errors here instead of executing against
+        the stale region. An RNR return has NO side effects (the RQ is
+        untouched), so the reliability layer can back off and replay."""
         status = None
         remote_cqe = None
+        entries: List[tuple] = []
         if wqe.opcode in ONE_SIDED:
             status = self._check_mr(wqe.rkey, qp.remote_peer,
                                     wqe.remote_addr, wqe.length)
             if status is None:
                 if wqe.opcode is Opcode.READ:
-                    plan.append(("xfer", qp.remote_peer, qp.local_peer,
-                                 wqe.remote_addr, wqe.local_addr,
-                                 wqe.length))
+                    entries.append(("xfer", qp.remote_peer, qp.local_peer,
+                                    wqe.remote_addr, wqe.local_addr,
+                                    wqe.length))
                 else:  # WRITE / WRITE_IMM
-                    plan.append(("xfer", qp.local_peer, qp.remote_peer,
-                                 wqe.local_addr, wqe.remote_addr,
-                                 wqe.length))
+                    entries.append(("xfer", qp.local_peer, qp.remote_peer,
+                                    wqe.local_addr, wqe.remote_addr,
+                                    wqe.length))
                     if wqe.opcode is Opcode.WRITE_IMM:
                         rqp = self._responder_qp(qp)
                         if rqp is not None:
@@ -308,8 +425,8 @@ class RDMAEngine:
             else:
                 recv = rqp.rq.popleft()
                 n = min(wqe.length, recv.length)
-                plan.append(("xfer", qp.local_peer, qp.remote_peer,
-                             wqe.local_addr, recv.local_addr, n))
+                entries.append(("xfer", qp.local_peer, qp.remote_peer,
+                                wqe.local_addr, recv.local_addr, n))
                 if wqe.opcode is Opcode.SEND_INV and wqe.inv_rkey is not None:
                     self.invalidate_mr(wqe.inv_rkey)
                 remote_cqe = (rqp, CQE(
@@ -318,12 +435,7 @@ class RDMAEngine:
                     imm=wqe.imm if wqe.opcode is Opcode.SEND_IMM else None))
         else:
             status = CQEStatus.INVALID_OPCODE
-
-        completions.append((qp, CQE(
-            wr_id=wqe.wr_id, qp_num=qp.qp_num, opcode=wqe.opcode,
-            status=status or CQEStatus.SUCCESS,
-            byte_len=wqe.length if status is None else 0,
-            imm=wqe.imm), remote_cqe))
+        return status, entries, remote_cqe
 
     def _responder_qp(self, qp: QueuePair) -> Optional[QueuePair]:
         """The paired QP on the remote peer (same connection) — indexed

@@ -192,6 +192,27 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
         out["dispatch_classes"] = float(len(dp.get("classes", {})))
         for name, ledger in dp.get("classes", {}).items():
             out[f"dispatch_pkts_{name}"] = float(ledger.get("pkts", 0))
+    # Reliability terms: with the lossy-fabric layer active, every
+    # retransmit re-pays the steady-state WQE interval (wasted wire
+    # time), RNR backoff idles the engine for modeled µs, and shed
+    # packets are load deliberately refused at the MAC. goodput_fraction
+    # is the share of executed WQE slots that carried FIRST deliveries.
+    rel = stats.get("reliability") or {}
+    if rel.get("psn_assigned"):
+        retx = rel.get("retransmits", 0)
+        delivered = rel.get("acks", 0)
+        out["retransmits"] = float(retx)
+        out["reliability_naks"] = float(rel.get("naks", 0)
+                                        + rel.get("rnr_naks", 0))
+        out["reliability_timeouts"] = float(rel.get("timeouts", 0))
+        out["goodput_fraction"] = (delivered / (delivered + retx)
+                                   if delivered + retx else 1.0)
+        out["retx_overhead_s"] = retx * (ser + o["fetch_next"])
+        out["rnr_backoff_s"] = rel.get("backoff_us", 0.0) * 1e-6
+        out["shed_pkts"] = float(rel.get("shed", 0))
+        out["qp_errors"] = float(rel.get("qp_errors", 0))
+        exec_time += out["retx_overhead_s"] + out["rnr_backoff_s"]
+        out["executor_predicted_s"] = exec_time
     # Fairness term: engine.stats carries the per-QP service ledger.
     qp_service = stats.get("qp_service")
     if qp_service:

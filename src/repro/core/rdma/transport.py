@@ -290,6 +290,19 @@ class _TransportBase:
         self.stats = _new_stats()
         self._seen_buckets = set()
         self._seen_qdma_buckets = set()
+        # Reliability harness hook: a seeded reliability.FaultInjector
+        # installed here decides, per WQE transmission, whether the wire
+        # delivers/drops/duplicates/delays/corrupts it (the engine
+        # consults this before an entry reaches a descriptor table, so
+        # faulted traffic never alters the compiled shape buckets).
+        self.fault_injector = None
+
+    def install_fault_injector(self, injector):
+        """Attach a ``reliability.FaultInjector`` at the transport
+        boundary (``None`` restores the perfect wire). The engine
+        auto-enables its reliability layer on the next flush."""
+        self.fault_injector = injector
+        return injector
 
     # Backwards-compatible counters (examples/tests read these).
     @property

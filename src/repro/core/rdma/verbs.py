@@ -47,6 +47,24 @@ class CQEStatus(enum.Enum):
     REMOTE_ACCESS_ERROR = "remote_access_error"   # bad rkey / bounds
     INVALID_OPCODE = "invalid_opcode"
     RNR = "receiver_not_ready"                    # SEND with empty RQ
+    # terminal statuses of the reliability layer's QP state machine:
+    # retry budgets exhausted on the wire / RNR path, and the flush
+    # status every remaining WQE drains with once a QP is in ERROR
+    RETRY_EXC_ERROR = "retry_exceeded"
+    RNR_RETRY_EXC_ERROR = "rnr_retry_exceeded"
+    WR_FLUSH_ERROR = "wr_flush_err"
+
+
+class QPState(enum.Enum):
+    """QP state machine (the RoCEv2 modify_qp ladder, collapsed):
+    ``RTS`` serves traffic; ``SQD`` drains the send queue without
+    admitting new WQEs; ``ERROR`` (entered on retry/RNR exhaustion or a
+    dead peer) completes every queued WQE with ``WR_FLUSH_ERROR`` until
+    ``engine.recover_qp`` transitions back to RTS with a fresh PSN
+    epoch."""
+    RTS = "rts"
+    SQD = "sqd"
+    ERROR = "error"
 
 
 @dataclass(frozen=True)
@@ -116,6 +134,7 @@ class QueuePair:
     placement: Placement = Placement.DEV_MEM
     weight: int = 1
     lc: bool = False
+    state: QPState = QPState.RTS
     arm_times: Deque[float] = field(default_factory=deque)
     sq: Deque[WQE] = field(default_factory=deque)
     rq: Deque[WQE] = field(default_factory=deque)   # pre-posted RECVs

@@ -75,16 +75,25 @@ class TrafficRouter:
     toward the RDMA engine, ``ACTION_DROP`` rows are discarded, handler
     rows land in the RX ring tagged with the handler's workload id (the
     egress ``StreamDispatcher`` demuxes the ring by that tag). No table
-    given → ``default_ingress_table()``, the seed RDMA-vs-ring split."""
+    given → ``default_ingress_table()``, the seed RDMA-vs-ring split.
 
-    def __init__(self, rx_ring=None, table: Optional[MatchTable] = None):
+    ``shedder`` (a reliability ``LoadShedder``) arms graceful
+    degradation: while the engine's un-ACKed retransmit window exceeds
+    the shedder's threshold, packets matched by ``shed=True`` table rows
+    are dropped at the MAC (counted in ``pkt_counters["shed"]`` and the
+    engine's ``stats["reliability"]["shed"]`` ledger) instead of
+    admitted — best-effort streaming load yields to recovery traffic."""
+
+    def __init__(self, rx_ring=None, table: Optional[MatchTable] = None,
+                 shedder=None):
         self.rx_ring = rx_ring
         self.table = table if table is not None else default_ingress_table()
+        self.shedder = shedder
         self.handlers: Dict[str, Callable[[List[TransferDesc]], None]] = {}
         self.counters: Dict[TrafficClass, Dict[str, int]] = {
             tc: {"bytes": 0, "count": 0} for tc in TrafficClass}
         self.pkt_counters = {"rdma": 0, "streamed": 0, "dropped": 0,
-                             "backpressure": 0}
+                             "backpressure": 0, "shed": 0}
         # per-action ingress ledger ("rdma"/"drop"/"stream"/handler id):
         # finer-grained than the 4-key pkt_counters outcome view. On a
         # table without ACTION_DROP rows, pkt_counters' drop/
@@ -106,13 +115,20 @@ class TrafficRouter:
         counts."""
         headers = np.asarray(headers)
         fields = classify_headers(headers)
-        actions = self.table.classify(fields)
-        out = {"rdma": 0, "streamed": 0, "dropped": 0, "backpressure": 0}
+        actions, shed_flags = self.table.classify_ex(fields)
+        out = {"rdma": 0, "streamed": 0, "dropped": 0, "backpressure": 0,
+               "shed": 0}
         refused = ("dropped" if self.rx_ring is None
                    or self.rx_ring.policy == "drop" else "backpressure")
-        for h, act in zip(headers, actions):
+        # one pressure check per ingest burst — the MAC samples the
+        # retransmit gauge, it does not re-read it per packet
+        shedding = self.shedder is not None and self.shedder.should_shed()
+        for h, act, sheddable in zip(headers, actions, shed_flags):
             self.class_counters[act] = self.class_counters.get(act, 0) + 1
-            if act == ACTION_RDMA:
+            if shedding and sheddable:
+                out["shed"] += 1
+                self.shedder.record_shed()
+            elif act == ACTION_RDMA:
                 out["rdma"] += 1
             elif act == ACTION_DROP:
                 out["dropped"] += 1

@@ -70,10 +70,14 @@ class MatchEntry:
     ``fields`` is a tuple of ``(name, lo, hi)`` inclusive range
     conditions over the parsed field vector; all must hold for the entry
     to match (absent fields are wildcards, exact matches have
-    ``lo == hi``)."""
+    ``lo == hi``). ``shed`` marks the row's traffic best-effort: under
+    retransmit pressure (the reliability layer's ``LoadShedder``) the
+    ingress drops matched packets at the MAC instead of admitting them —
+    graceful degradation rather than wedging the ring."""
     action: Action
     fields: Tuple[Tuple[str, int, int], ...] = ()
     priority: int = 0
+    shed: bool = False
 
     def __post_init__(self):
         for name, lo, hi in self.fields:
@@ -94,27 +98,32 @@ class MatchTable:
         self.default = default
         self.entries: List[MatchEntry] = list(entries)
 
-    def add(self, action: Action, priority: int = 0,
+    def add(self, action: Action, priority: int = 0, shed: bool = False,
             **matches) -> "MatchTable":
         """Append one entry: ``table.add(PARSER_WID, udp_dport=9000)`` or
-        ranges ``table.add(wid, opcode=(6, 11))``. Returns self (chains).
-        """
+        ranges ``table.add(wid, opcode=(6, 11))``; ``shed=True`` marks
+        the row best-effort under retransmit pressure. Returns self
+        (chains)."""
         fields = []
         for name, cond in matches.items():
             lo, hi = cond if isinstance(cond, tuple) else (cond, cond)
             fields.append((name, int(lo), int(hi)))
-        self.entries.append(MatchEntry(action, tuple(fields), priority))
+        self.entries.append(MatchEntry(action, tuple(fields), priority,
+                                       shed))
         return self
 
-    def classify(self, fields: np.ndarray) -> List[Action]:
-        """Vectorized match of (n, N_FIELDS) parsed vectors → one action
-        per packet. Entries apply in ascending (priority, insertion)
-        order, later applications overwriting — so the highest priority
-        wins, ties going to the most recently added entry."""
+    def classify_ex(self, fields: np.ndarray
+                    ) -> Tuple[List[Action], List[bool]]:
+        """Vectorized match of (n, N_FIELDS) parsed vectors → one
+        ``(action, sheddable)`` pair per packet (as two parallel lists).
+        Entries apply in ascending (priority, insertion) order, later
+        applications overwriting — so the highest priority wins, ties
+        going to the most recently added entry."""
         fields = np.asarray(fields)
         n = fields.shape[0]
         out = np.zeros(n, np.int64)          # indices into actions list
         actions: List[Action] = [self.default]
+        sheds: List[bool] = [False]          # the default is never shed
         order = sorted(range(len(self.entries)),
                        key=lambda i: (self.entries[i].priority, i))
         for i in order:
@@ -124,8 +133,13 @@ class MatchTable:
                 col = fields[:, _FIELD_INDEX[name]]
                 mask &= (col >= lo) & (col <= hi)
             actions.append(e.action)
+            sheds.append(e.shed)
             out[mask] = len(actions) - 1
-        return [actions[i] for i in out]
+        return [actions[i] for i in out], [sheds[i] for i in out]
+
+    def classify(self, fields: np.ndarray) -> List[Action]:
+        """``classify_ex`` without the shed flags."""
+        return self.classify_ex(fields)[0]
 
     def match(self, field_vec) -> Action:
         """Single parsed field vector → action."""

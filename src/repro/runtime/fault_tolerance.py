@@ -60,6 +60,48 @@ class HeartbeatMonitor:
         return [h.host_id for h in self.hosts.values() if h.alive]
 
 
+class EngineHeartbeatBridge:
+    """Wires a ``HeartbeatMonitor`` to an ``RDMAEngine``'s completion
+    stream: every successful CQE on a QP is proof-of-life for that QP's
+    remote peer (RoCE traffic doubles as the heartbeat, the way a NIC's
+    keepalive rides the data path), and a peer the monitor declares dead
+    is failed at the engine — its QPs transition to ERROR and drain with
+    WR_FLUSH_ERROR via the reliability layer's state machine, instead of
+    their WQEs retrying into a void forever.
+
+    ``monitor`` host ids are engine peer indices here. Call ``check()``
+    wherever the control plane ticks (per flush loop, per training
+    step): it returns the ``(peer, [qps-failed])`` list of newly-dead
+    peers after notifying the engine.
+    """
+
+    def __init__(self, engine, monitor: HeartbeatMonitor):
+        self.engine = engine
+        self.monitor = monitor
+        self.failed: Dict[int, list] = {}    # peer -> QPs moved to ERROR
+        engine.cqe_observers.append(self._on_cqe)
+
+    def _on_cqe(self, qp, cqe) -> None:
+        # any CQE proves the LOCAL peer alive (the engine is running),
+        # but only a SUCCESS completion proves the REMOTE peer processed
+        # traffic — error/flush CQEs are engine-local and must not
+        # refresh the far side's liveness
+        if qp.local_peer in self.monitor.hosts:
+            self.monitor.beat(qp.local_peer)
+        if cqe.status.value == "success" and (
+                qp.remote_peer in self.monitor.hosts):
+            self.monitor.beat(qp.remote_peer)
+
+    def check(self) -> List[Tuple[int, list]]:
+        """Tick the monitor; fail newly-dead peers at the engine."""
+        out = []
+        for peer in self.monitor.check():
+            qps = self.engine.fail_peer(peer)
+            self.failed[peer] = qps
+            out.append((peer, qps))
+        return out
+
+
 def detect_stragglers(step_times: Dict[int, float],
                       threshold: float = 2.0) -> List[int]:
     """Hosts whose step time exceeds threshold x median."""

@@ -92,7 +92,7 @@ class TestInjectedRegression:
         names = {g.baseline for g in ci_gate.GATES}
         assert names == {"BENCH_transport.json", "BENCH_fairness.json",
                          "BENCH_lc_offload.json", "BENCH_streaming.json",
-                         "BENCH_dispatch.json"}
+                         "BENCH_dispatch.json", "BENCH_reliability.json"}
         for g in ci_gate.GATES:
             compile_rules = [r for r in g.rules if "compile" in r.key]
             assert compile_rules, f"{g.name} gates no compile counts"
@@ -124,6 +124,45 @@ class TestInjectedRegression:
                          ("flush_ratio_split_over_mixed", 0.9),
                          ("pr4_flush_parity", 1.5)):
             rec = dict(base, **{key: bad})
+            msgs = check_gate(g, rec, base)
+            assert len(msgs) == 1 and key in msgs[0], (key, msgs)
+
+    def test_reliability_gate_pins_chaos_smoke_keys(self):
+        """The reliability gate's schema: zero-tolerance retransmit-path
+        compile count, byte parity + CQE order under 10% drop, bounded
+        retransmission overhead, innocent-QP fairness, and the terminal
+        CQE / recovery contract — injecting a regression into each key
+        fails on exactly that key."""
+        g = next(g for g in ci_gate.GATES if g.name == "reliability")
+        keys = {r.key for r in g.rules}
+        assert {"warm_descriptor_compiles", "parity_10pct_drop",
+                "cqe_order_ok", "flush_overhead_ratio",
+                "fairness.host_jain_while_victim_retx",
+                "recovery.terminal_cqes_not_exceptions",
+                "recovery.recovered_ok"} <= keys
+        compiles = next(r for r in g.rules
+                        if r.key == "warm_descriptor_compiles")
+        assert compiles.direction == "<=" and compiles.tolerance == 0.0
+        base = {"warm_descriptor_compiles": 0, "parity_10pct_drop": True,
+                "cqe_order_ok": True, "flush_overhead_ratio": 1.6,
+                "fairness": {"host_jain_while_victim_retx": 1.0},
+                "recovery": {"terminal_cqes_not_exceptions": True,
+                             "recovered_ok": True}}
+        assert check_gate(g, json.loads(json.dumps(base)), base) == []
+        for key, bad in (
+                ("warm_descriptor_compiles", 2),
+                ("parity_10pct_drop", False),
+                ("cqe_order_ok", False),
+                ("flush_overhead_ratio", 3.5),
+                ("fairness.host_jain_while_victim_retx", 0.4),
+                ("recovery.terminal_cqes_not_exceptions", False),
+                ("recovery.recovered_ok", False)):
+            rec = json.loads(json.dumps(base))
+            node = rec
+            *parents, leaf = key.split(".")
+            for p in parents:
+                node = node[p]
+            node[leaf] = bad
             msgs = check_gate(g, rec, base)
             assert len(msgs) == 1 and key in msgs[0], (key, msgs)
 

@@ -197,7 +197,7 @@ class TestDispatchParity:
             depth=16, burst=4, pipeline_depth=pipeline_depth)
         counts = router.ingest_packets(hdrs)
         assert counts == {"rdma": 8, "streamed": 16, "dropped": 0,
-                          "backpressure": 0}
+                          "backpressure": 0, "shed": 0}
         assert disp.service() == 16
         # streamed slots alternate ctrl/bulk in arrival order: ctrl at
         # even seqs, bulk at odd seqs

@@ -1,0 +1,461 @@
+"""Lossy-fabric reliability layer: fault injection, PSN retransmission,
+the QP error-state machine, RNR backoff, heartbeat-driven peer failure,
+and graceful load shedding.
+
+The contracts (ISSUE acceptance):
+
+* retry/RNR exhaustion surfaces TERMINAL ERROR CQEs — never exceptions,
+  never hangs — and the rest of the queue drains with WR_FLUSH_ERROR;
+* existing error CQE paths (REMOTE_ACCESS_ERROR, INVALID_OPCODE, RNR)
+  stay intact end-to-end through ``flush_doorbells`` in poll AND
+  interrupt modes, reliability on or off;
+* an MR invalidated while WQEs referencing it are queued — or parked
+  between retransmissions — errors those WQEs instead of executing
+  against the stale region;
+* a dead peer (heartbeat timeout) fails its QPs at the engine;
+* retransmit pressure sheds best-effort ingress instead of wedging.
+"""
+import numpy as np
+import pytest
+
+from repro.core.rdma import (CQEStatus, FaultInjector, FaultProfile,
+                             LoadShedder, Opcode, QPState, RDMAEngine,
+                             ReliabilityConfig, WQE)
+from repro.core.streaming.classifier import TrafficRouter, make_roce_header
+from repro.core.streaming.dispatch import (ACTION_RDMA, ACTION_STREAM,
+                                           MatchTable)
+from repro.core.streaming.rx_ring import RXRing
+from repro.runtime.fault_tolerance import (EngineHeartbeatBridge,
+                                           HeartbeatMonitor)
+
+
+@pytest.fixture
+def eng():
+    return RDMAEngine(n_peers=2, pool_size=4096)
+
+
+def _write(qp, wr_id, rkey, length=8, local=0, remote=0):
+    return WQE(Opcode.WRITE, qp.qp_num, wr_id=wr_id, local_addr=local,
+               remote_addr=remote, length=length, rkey=rkey)
+
+
+def _drain(eng, qp, rounds=80):
+    cqes = []
+    for _ in range(rounds):
+        eng.flush_doorbells()
+        cqes.extend(eng.poll_cq(qp))
+        if not qp.pending_count and not (
+                eng._reliability and eng._reliability.pending(qp.qp_num)):
+            break
+    return cqes
+
+
+class TestFaultInjector:
+    def test_seeded_verdicts_are_deterministic(self, eng):
+        qp = eng.create_qp(0, 1)
+        a = FaultInjector(3, drop=0.2, duplicate=0.1, delay=0.1,
+                          corrupt=0.05)
+        b = FaultInjector(3, profile=FaultProfile(0.2, 0.1, 0.1, 0.05))
+        assert [a.verdict(qp) for _ in range(200)] == \
+               [b.verdict(qp) for _ in range(200)]
+
+    def test_rates_must_sum_into_unit_interval(self):
+        with pytest.raises(ValueError):
+            FaultProfile(drop=0.7, duplicate=0.5)
+        with pytest.raises(ValueError):
+            FaultInjector(0, drop=1.5)
+        with pytest.raises(ValueError):
+            FaultInjector(0, profile=FaultProfile(0.1), drop=0.1)
+
+    def test_only_qps_scopes_faults_to_victims(self, eng):
+        victim, innocent = eng.create_qp(0, 1), eng.create_qp(0, 1)
+        inj = FaultInjector(0, drop=1.0, only_qps=[victim.qp_num])
+        assert all(inj.verdict(innocent) == "deliver" for _ in range(20))
+        assert inj.verdict(victim) == "drop"
+
+    def test_stalled_peer_drops_without_consuming_rng(self, eng):
+        qp = eng.create_qp(0, 1)
+        a = FaultInjector(9, drop=0.3)
+        b = FaultInjector(9, drop=0.3)
+        b.stall_peer(1)
+        stalled = [b.verdict(qp) for _ in range(10)]
+        assert stalled == ["drop"] * 10
+        assert b.stats["stalled_drops"] == 10
+        b.unstall_peer(1)
+        # the fault tape resumes exactly where an undisturbed run starts
+        assert [b.verdict(qp) for _ in range(50)] == \
+               [a.verdict(qp) for _ in range(50)]
+
+
+class TestErrorCQEPaths:
+    """The seed's error statuses still surface end-to-end through
+    ``flush_doorbells``, reliability on or off, poll and interrupt."""
+
+    @pytest.mark.parametrize("reliable", [False, True])
+    @pytest.mark.parametrize("mode", ["poll", "interrupt"])
+    def test_remote_access_error_bad_rkey(self, eng, mode, reliable):
+        if reliable:
+            eng.enable_reliability()
+        qp = eng.create_qp(0, 1)
+        got = []
+        if mode == "interrupt":
+            eng.register_interrupt(qp, got.append)
+        eng.post_send(qp, _write(qp, 1, rkey=0xBAD))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()
+        cqes = got if mode == "interrupt" else eng.poll_cq(qp)
+        assert [c.status for c in cqes] == [CQEStatus.REMOTE_ACCESS_ERROR]
+
+    @pytest.mark.parametrize("reliable", [False, True])
+    @pytest.mark.parametrize("mode", ["poll", "interrupt"])
+    def test_remote_access_error_out_of_bounds(self, eng, mode, reliable):
+        if reliable:
+            eng.enable_reliability()
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        got = []
+        if mode == "interrupt":
+            eng.register_interrupt(qp, got.append)
+        eng.post_send(qp, _write(qp, 1, mr.rkey, length=256))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()
+        cqes = got if mode == "interrupt" else eng.poll_cq(qp)
+        assert [c.status for c in cqes] == [CQEStatus.REMOTE_ACCESS_ERROR]
+
+    @pytest.mark.parametrize("reliable", [False, True])
+    @pytest.mark.parametrize("mode", ["poll", "interrupt"])
+    def test_invalid_opcode(self, eng, mode, reliable):
+        if reliable:
+            eng.enable_reliability()
+        qp = eng.create_qp(0, 1)
+        got = []
+        if mode == "interrupt":
+            eng.register_interrupt(qp, got.append)
+        eng.post_send(qp, WQE(Opcode.RECV, qp.qp_num, wr_id=1))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()
+        cqes = got if mode == "interrupt" else eng.poll_cq(qp)
+        assert [c.status for c in cqes] == [CQEStatus.INVALID_OPCODE]
+
+    @pytest.mark.parametrize("mode", ["poll", "interrupt"])
+    def test_rnr_empty_rq_default_path(self, eng, mode):
+        """Without the reliability layer, SEND into an empty RQ is the
+        seed's immediate RNR completion."""
+        qp = eng.create_qp(0, 1)
+        got = []
+        if mode == "interrupt":
+            eng.register_interrupt(qp, got.append)
+        eng.post_send(qp, WQE(Opcode.SEND, qp.qp_num, wr_id=1, length=8))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()
+        cqes = got if mode == "interrupt" else eng.poll_cq(qp)
+        assert [c.status for c in cqes] == [CQEStatus.RNR]
+
+
+class TestInvalidateMrRegression:
+    def test_invalidate_while_queued_errors_at_flush(self, eng):
+        """WQEs covered by a deferred doorbell when their MR is
+        invalidated must complete with REMOTE_ACCESS_ERROR at flush time
+        — and must not have written anything."""
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        eng.write_buffer(0, 0, np.full(8, 9.0, np.float32))
+        eng.post_send(qp, _write(qp, 1, mr.rkey))
+        eng.post_send(qp, _write(qp, 2, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.invalidate_mr(mr.rkey)
+        eng.flush_doorbells()
+        assert [c.status for c in eng.poll_cq(qp)] == \
+               [CQEStatus.REMOTE_ACCESS_ERROR] * 2
+        assert not eng.read_buffer(1, 0, 8).any()
+
+    def test_invalidate_between_retransmits_errors_on_replay(self, eng):
+        """An MR invalidated while its WQE sits parked for replay must
+        error on redelivery, not execute against the stale region."""
+        inj = eng.install_fault_injector(FaultInjector(0))
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        eng.write_buffer(0, 0, np.full(8, 9.0, np.float32))
+        inj.stall_peer(1)                 # first transmission is lost
+        eng.post_send(qp, _write(qp, 1, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()
+        assert eng._reliability.pending(qp.qp_num) == 1
+        eng.invalidate_mr(mr.rkey)        # ...while parked for replay
+        inj.unstall_peer(1)
+        cqes = _drain(eng, qp)
+        assert [c.status for c in cqes] == [CQEStatus.REMOTE_ACCESS_ERROR]
+        assert not eng.read_buffer(1, 0, 8).any()
+
+
+class TestRetryExhaustion:
+    def test_stalled_peer_exhausts_into_terminal_cqes(self, eng):
+        """Bounded retries against a dead peer end in a RETRY_EXC_ERROR
+        for the culprit, WR_FLUSH_ERROR for the rest — CQEs, not
+        exceptions, and CQ order tells the story in that order."""
+        inj = eng.install_fault_injector(
+            FaultInjector(1), ReliabilityConfig(retry_cnt=3))
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        inj.stall_peer(1)
+        for i in range(3):
+            eng.post_send(qp, _write(qp, 10 + i, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        cqes = _drain(eng, qp)
+        assert qp.state is QPState.ERROR
+        assert [c.wr_id for c in cqes] == [10, 11, 12]
+        assert cqes[0].status is CQEStatus.RETRY_EXC_ERROR
+        assert [c.status for c in cqes[1:]] == \
+               [CQEStatus.WR_FLUSH_ERROR] * 2
+        rel = eng.stats["reliability"]
+        assert rel["qp_errors"] == 1 and rel["flushed_wqes"] == 2
+        assert rel["retransmits"] == 3    # retry budget, fully spent
+
+    def test_posting_to_error_qp_flushes(self, eng):
+        inj = eng.install_fault_injector(
+            FaultInjector(1), ReliabilityConfig(retry_cnt=1))
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        inj.stall_peer(1)
+        eng.post_send(qp, _write(qp, 1, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        _drain(eng, qp)
+        assert qp.state is QPState.ERROR
+        eng.post_send(qp, _write(qp, 2, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()
+        assert [c.status for c in eng.poll_cq(qp)] == \
+               [CQEStatus.WR_FLUSH_ERROR]
+
+    def test_recover_qp_resumes_traffic_with_fresh_psn(self, eng):
+        inj = eng.install_fault_injector(
+            FaultInjector(1), ReliabilityConfig(retry_cnt=1))
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        inj.stall_peer(1)
+        eng.post_send(qp, _write(qp, 1, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        _drain(eng, qp)
+        assert qp.state is QPState.ERROR
+        inj.unstall_peer(1)
+        eng.recover_qp(qp)
+        assert qp.state is QPState.RTS
+        eng.write_buffer(0, 0, np.full(8, 4.0, np.float32))
+        eng.post_send(qp, _write(qp, 2, mr.rkey))
+        eng.ring_sq_doorbell(qp)
+        assert eng.poll_cq(qp)[0].status is CQEStatus.SUCCESS
+        np.testing.assert_array_equal(eng.read_buffer(1, 0, 8),
+                                      np.full(8, 4.0, np.float32))
+        assert eng.stats["reliability"]["recovered"] == 1
+
+
+class TestRNRBackoff:
+    def test_rnr_backs_off_then_delivers(self, eng):
+        """With reliability on, SEND into an empty RQ is an RNR NAK +
+        exponential backoff — it completes SUCCESS once a RECV lands."""
+        eng.enable_reliability()
+        a, b = eng.create_qp(0, 1), eng.create_qp(1, 0)
+        eng.write_buffer(0, 0, np.full(8, 3.0, np.float32))
+        eng.post_send(a, WQE(Opcode.SEND, a.qp_num, wr_id=1, local_addr=0,
+                             length=8))
+        eng.ring_sq_doorbell(a, defer=True)
+        eng.flush_doorbells()
+        assert not eng.poll_cq(a)         # backing off, not completed
+        rel = eng.stats["reliability"]
+        assert rel["rnr_naks"] == 1 and rel["backoff_us"] > 0
+        eng.post_recv(b, WQE(Opcode.RECV, b.qp_num, wr_id=2,
+                             local_addr=100, length=8))
+        cqes = _drain(eng, a)
+        assert [c.status for c in cqes] == [CQEStatus.SUCCESS]
+        np.testing.assert_array_equal(eng.read_buffer(1, 100, 8),
+                                      np.full(8, 3.0, np.float32))
+        assert eng.poll_cq(b)[0].opcode is Opcode.RECV
+
+    def test_rnr_backoff_grows_exponentially(self, eng):
+        eng.enable_reliability(ReliabilityConfig(
+            rnr_retry=16, rnr_base_flushes=1, rnr_max_flushes=8,
+            rnr_timer_us=10.0))
+        a = eng.create_qp(0, 1)
+        eng.post_send(a, WQE(Opcode.SEND, a.qp_num, wr_id=1, length=8))
+        eng.ring_sq_doorbell(a, defer=True)
+        seen = []
+        rel = eng.stats["reliability"]
+        for _ in range(40):
+            before = rel["backoff_us"]
+            eng.flush_doorbells()
+            if rel["backoff_us"] != before:
+                seen.append(rel["backoff_us"] - before)
+            if len(seen) >= 5:
+                break
+        # 1, 2, 4, 8, 8 flushes of backoff at 10 µs per base unit
+        assert seen == [10.0, 20.0, 40.0, 80.0, 80.0]
+
+    def test_rnr_retry_exhaustion_is_terminal(self, eng):
+        eng.enable_reliability(ReliabilityConfig(rnr_retry=2,
+                                                 rnr_base_flushes=1))
+        a = eng.create_qp(0, 1)
+        eng.post_send(a, WQE(Opcode.SEND, a.qp_num, wr_id=1, length=8))
+        eng.ring_sq_doorbell(a, defer=True)
+        cqes = _drain(eng, a)
+        assert [c.status for c in cqes] == [CQEStatus.RNR_RETRY_EXC_ERROR]
+        assert a.state is QPState.ERROR
+
+
+class TestHeartbeatBridge:
+    def test_cqe_traffic_beats_and_silence_fails_peer(self):
+        clock = [0.0]
+        eng = RDMAEngine(n_peers=3, pool_size=4096)
+        mon = HeartbeatMonitor(3, timeout=5.0, clock=lambda: clock[0])
+        bridge = EngineHeartbeatBridge(eng, mon)
+        qp1, qp2 = eng.create_qp(0, 1), eng.create_qp(0, 2)
+        mr1, mr2 = eng.register_mr(1, 0, 64), eng.register_mr(2, 0, 64)
+        for qp, mr in ((qp1, mr1), (qp2, mr2)):
+            eng.post_send(qp, _write(qp, 1, mr.rkey))
+            eng.ring_sq_doorbell(qp)
+        clock[0] = 4.0                    # peer 1 stays chatty...
+        eng.post_send(qp1, _write(qp1, 2, mr1.rkey))
+        eng.ring_sq_doorbell(qp1)
+        clock[0] = 7.0                    # ...peer 2 goes silent
+        dead = bridge.check()
+        assert [p for p, _ in dead] == [2]
+        assert dead[0][1] == [qp2]
+        assert qp2.state is QPState.ERROR and qp1.state is QPState.RTS
+        assert bridge.check() == []       # dead only reported once
+
+    def test_failed_peer_qps_drain_outstanding_wqes(self):
+        clock = [0.0]
+        eng = RDMAEngine(n_peers=2, pool_size=4096)
+        inj = eng.install_fault_injector(FaultInjector(0))
+        mon = HeartbeatMonitor(2, timeout=5.0, clock=lambda: clock[0])
+        bridge = EngineHeartbeatBridge(eng, mon)
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        inj.stall_peer(1)
+        eng.post_send(qp, _write(qp, 1, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()             # parked for replay, no CQE yet
+        clock[0] = 7.0
+        mon.beat(0)                       # local control plane keepalive
+        (peer, qps), = bridge.check()
+        assert peer == 1 and qps == [qp]
+        eng.flush_doorbells()             # drain leg completes the WQE
+        assert [c.status for c in eng.poll_cq(qp)] == \
+               [CQEStatus.WR_FLUSH_ERROR]
+
+
+class TestLoadShedding:
+    def _pressured_engine(self):
+        eng = RDMAEngine(n_peers=2, pool_size=4096)
+        inj = eng.install_fault_injector(FaultInjector(7, drop=1.0))
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        for i in range(6):
+            eng.post_send(qp, _write(qp, i, mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+        eng.flush_doorbells()             # all parked: pressure = 6
+        return eng, inj, qp
+
+    def test_shedder_reads_retransmit_pressure(self):
+        eng, _, _ = self._pressured_engine()
+        shedder = LoadShedder(eng, threshold=4)
+        assert shedder.pressure == 6 and shedder.should_shed()
+        assert not LoadShedder(eng, threshold=7).should_shed()
+        assert not LoadShedder(RDMAEngine(n_peers=2, pool_size=64),
+                               threshold=1).should_shed()
+
+    def test_ingress_sheds_marked_rows_under_pressure(self):
+        eng, inj, qp = self._pressured_engine()
+        table = (MatchTable(default=ACTION_STREAM)
+                 .add(ACTION_RDMA, is_rdma=1)
+                 .add(ACTION_STREAM, shed=True, udp_dport=80))
+        router = TrafficRouter(rx_ring=RXRing(eng, peer=1, depth=8),
+                               table=table,
+                               shedder=LoadShedder(eng, threshold=1))
+        hdrs = np.stack(
+            [make_roce_header(0, 0, is_rdma=False, dport=80)] * 4
+            + [make_roce_header(10, 1, is_rdma=True)] * 2)
+        out = router.ingest_packets(hdrs)
+        # best-effort rows shed; RDMA traffic untouched
+        assert out["shed"] == 4 and out["rdma"] == 2
+        assert eng.stats["reliability"]["shed"] == 4
+        assert router.pkt_counters["shed"] == 4
+        # pressure clears -> the same stimulus is admitted again
+        inj.unstall_peer(1)               # no-op; profile still drops
+        eng.transport.fault_injector = None
+        _drain(eng, qp)
+        assert not LoadShedder(eng, threshold=1).should_shed()
+        out = router.ingest_packets(hdrs)
+        assert out["shed"] == 0 and out["streamed"] == 4
+
+
+class TestReliabilityLedgerAndSimulator:
+    def test_predict_from_stats_reliability_terms(self, eng):
+        eng.install_fault_injector(
+            FaultInjector(5, drop=0.2, corrupt=0.05))
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 2048)
+        eng.write_buffer(0, 0, np.arange(256, dtype=np.float32))
+        for i in range(16):
+            eng.post_send(qp, _write(qp, i, mr.rkey, length=64,
+                                     local=i * 64, remote=i * 64))
+        eng.ring_sq_doorbell(qp, defer=True)
+        cqes = _drain(eng, qp)
+        assert len(cqes) == 16
+        from repro.core.rdma.simulator import predict_from_stats
+        out = predict_from_stats(eng.stats, payload=256)
+        rel = eng.stats["reliability"]
+        assert out["retransmits"] == rel["retransmits"] > 0
+        assert 0.0 < out["goodput_fraction"] < 1.0
+        assert out["retx_overhead_s"] > 0
+        assert out["goodput_fraction"] == pytest.approx(
+            rel["acks"] / (rel["acks"] + rel["retransmits"]))
+
+    def test_default_engine_has_no_reliability_overhead(self, eng):
+        """Reliability is opt-in: an untouched engine carries no ledger
+        and predict_from_stats emits no reliability terms."""
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 64)
+        eng.post_send(qp, _write(qp, 1, mr.rkey))
+        eng.ring_sq_doorbell(qp)
+        assert "reliability" not in eng.stats
+        from repro.core.rdma.simulator import predict_from_stats
+        assert "retransmits" not in predict_from_stats(eng.stats, 64)
+
+
+class TestLookasideUnderFaults:
+    def test_lc_offload_survives_lossy_wire(self):
+        """A Lookaside MM offload over a 10%-drop wire: operand-fetch
+        READs and the StatusMsg write-back are re-issued by the
+        retransmission layer until they land — the drain loop treats an
+        un-ACKed window as progress instead of declaring a stall — and
+        the result is byte-correct."""
+        import jax.numpy as jnp
+        from repro.core.lookaside import ControlMsg, LookasideBlock
+        from repro.kernels.lc_offload import (MM_WORKLOAD,
+                                              register_default_kernels)
+        from repro.kernels.ref import ref_matmul
+
+        eng = RDMAEngine(n_peers=2, pool_size=8192, scheduler="drr",
+                         flush_budget=8)
+        eng.install_fault_injector(
+            FaultInjector(3, drop=0.10, corrupt=0.03),
+            ReliabilityConfig(retry_cnt=16))
+        server = 1
+        blk = LookasideBlock(eng, peer=0, scratch_base=6144)
+        register_default_kernels(blk)
+        mr = eng.register_mr(server, 0, 4096)
+        m = 8
+        rng = np.random.default_rng(0)
+        A = rng.standard_normal((m, m)).astype(np.float32)
+        B = rng.standard_normal((m, m)).astype(np.float32)
+        eng.write_buffer(server, 0, A.ravel())
+        eng.write_buffer(server, 64, B.ravel())
+        blk.dispatch(ControlMsg(
+            MM_WORKLOAD, (server, mr.rkey, 0, 64, 2048, m, m, m), tag=5))
+        st = blk.poll(MM_WORKLOAD)
+        assert st is not None and st.ok, st
+        C = eng.read_buffer(server, 2048, m * m).reshape(m, m)
+        np.testing.assert_array_equal(
+            C, np.asarray(ref_matmul(jnp.asarray(A), jnp.asarray(B))))
+        assert eng.stats["reliability"]["retransmits"] > 0
+        assert eng.stats["reliability"]["retx_pressure"] == 0

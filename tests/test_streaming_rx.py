@@ -341,7 +341,7 @@ class TestIngress:
                             for i in range(8)])
         counts = router.ingest_packets(headers)
         assert counts == {"rdma": 4, "streamed": 4, "dropped": 0,
-                          "backpressure": 0}
+                          "backpressure": 0, "shed": 0}
         assert router.pkt_counters["streamed"] == 4
         assert ring.occupancy == 4
         assert k.stream() == 4           # only the non-RDMA share parses
@@ -368,4 +368,4 @@ class TestIngress:
         counts = router.ingest_packets(
             np.stack([make_roce_header(0, 1, is_rdma=False)]))
         assert counts == {"rdma": 0, "streamed": 0, "dropped": 1,
-                          "backpressure": 0}
+                          "backpressure": 0, "shed": 0}

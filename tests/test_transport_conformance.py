@@ -448,3 +448,152 @@ print("ICI_QDMA_OK", ici.stats["qdma_compiles"])
         r = subprocess.run([sys.executable, "-c", code], env=env,
                            capture_output=True, text=True, timeout=560)
         assert "ICI_QDMA_OK" in r.stdout, r.stdout + r.stderr
+
+
+class TestLossyFabricConformance:
+    """Reliability-layer contract: any seeded fault profile that
+    eventually delivers (loss rates bounded well under the retry budget)
+    yields final buffer pools BYTE-IDENTICAL to the fault-free run, and
+    per-QP CQE order equal to posting order. The workload gives each QP
+    a disjoint destination region, so cross-QP commit reordering (DELAY
+    faults) cannot mask a real divergence."""
+
+    REGION = 512
+
+    def _run(self, n_qps, depth, seed, injector=None):
+        from repro.core.rdma import ReliabilityConfig
+        pool = 4096
+        eng = RDMAEngine(n_peers=2, pool_size=pool)
+        if injector is not None:
+            eng.install_fault_injector(
+                injector, ReliabilityConfig(retry_cnt=16))
+        eng.flush_budget = 8
+        eng.scheduler = "drr"
+        rng = np.random.default_rng(seed)
+        init = rng.standard_normal(pool).astype(np.float32)
+        eng.write_buffer(0, 0, init)
+        qps, posted = [], {}
+        for q in range(n_qps):
+            qp = eng.create_qp(0, 1)
+            mr = eng.register_mr(1, q * self.REGION, self.REGION)
+            qps.append((qp, mr))
+            posted[q] = []      # keyed by position: qp_nums are global
+        for i in range(depth):
+            for q, (qp, mr) in enumerate(qps):
+                ln = int(rng.integers(1, 48))
+                src = int(rng.integers(0, pool - ln))
+                dst = q * self.REGION + int(rng.integers(
+                    0, self.REGION - ln))
+                wr = i * n_qps + q
+                eng.post_send(qp, WQE(Opcode.WRITE, qp.qp_num, wr_id=wr,
+                                      local_addr=src, remote_addr=dst,
+                                      length=ln, rkey=mr.rkey))
+                posted[q].append(wr)
+        for qp, _ in qps:
+            eng.ring_sq_doorbell(qp, defer=True)
+        polled = {q: [] for q in range(n_qps)}
+        for _ in range(600):
+            eng.flush_doorbells()
+            for q, (qp, _) in enumerate(qps):
+                polled[q].extend(eng.poll_cq(qp))
+            relia = eng._reliability
+            if not any(qp.pending_count for qp, _ in qps) and (
+                    relia is None or relia.outstanding() == 0):
+                break
+        return eng, posted, polled
+
+    @settings(max_examples=8, deadline=None)
+    @given(n_qps=st.integers(2, 4), depth=st.integers(4, 16),
+           fault_seed=st.integers(0, 1 << 16),
+           drop=st.floats(0.0, 0.12), duplicate=st.floats(0.0, 0.04),
+           delay=st.floats(0.0, 0.03), corrupt=st.floats(0.0, 0.01))
+    def test_seeded_faults_preserve_bytes_and_cqe_order(
+            self, n_qps, depth, fault_seed, drop, duplicate, delay,
+            corrupt):
+        from repro.core.rdma import FaultInjector
+        clean, posted, _ = self._run(n_qps, depth, seed=11)
+        inj = FaultInjector(fault_seed, drop=drop, duplicate=duplicate,
+                            delay=delay, corrupt=corrupt)
+        faulted, posted2, polled = self._run(n_qps, depth, seed=11,
+                                             injector=inj)
+        assert posted == posted2
+        for q, wrs in posted.items():
+            cqes = polled[q]
+            assert all(c.status.value == "success" for c in cqes)
+            assert [c.wr_id for c in cqes] == wrs
+        np.testing.assert_array_equal(
+            np.asarray(faulted.transport.pool),
+            np.asarray(clean.transport.pool))
+
+    def test_ten_percent_drop_parity_and_full_ledger(self):
+        """The ISSUE's acceptance point: 10% drop, byte parity, every
+        CQE a SUCCESS, and the ledger accounts for the loss."""
+        from repro.core.rdma import FaultInjector
+        clean, posted, _ = self._run(3, 24, seed=42)
+        inj = FaultInjector(42, drop=0.10, duplicate=0.05, delay=0.05,
+                            corrupt=0.03)
+        faulted, _, polled = self._run(3, 24, seed=42, injector=inj)
+        np.testing.assert_array_equal(
+            np.asarray(faulted.transport.pool),
+            np.asarray(clean.transport.pool))
+        for q, wrs in posted.items():
+            assert [c.wr_id for c in polled[q]] == wrs
+        rel = faulted.stats["reliability"]
+        assert rel["acks"] == rel["psn_assigned"] == 3 * 24
+        assert rel["retransmits"] >= rel["dropped"] > 0
+        assert rel["retx_pressure"] == 0      # nothing left outstanding
+
+    @pytest.mark.slow
+    def test_ici_transport_parity_under_faults(self):
+        """Same contract on the real ICITransport (forced 4-device host
+        mesh): 10% seeded drop + dup + corrupt, byte parity with the
+        fault-free run, zero outstanding retransmits at the end."""
+        code = """
+import numpy as np
+from repro.core.rdma import (FaultInjector, Opcode, RDMAEngine,
+                             ReliabilityConfig, WQE)
+from repro.core.rdma.transport import ICITransport
+
+def run(injector=None):
+    eng = RDMAEngine(n_peers=4, pool_size=1024)
+    assert isinstance(eng.transport, ICITransport), type(eng.transport)
+    if injector is not None:
+        eng.install_fault_injector(injector, ReliabilityConfig())
+    eng.flush_budget = 6
+    rng = np.random.default_rng(11)
+    eng.write_buffer(0, 0, rng.standard_normal(1024).astype(np.float32))
+    qps = []
+    for q in range(2):
+        qp = eng.create_qp(0, q + 1)
+        mr = eng.register_mr(q + 1, 0, 512)
+        qps.append(qp)
+        for i in range(10):
+            ln = int(rng.integers(1, 32))
+            eng.post_send(qp, WQE(Opcode.WRITE, qp.qp_num,
+                                  wr_id=i, local_addr=int(
+                                      rng.integers(0, 1024 - ln)),
+                                  remote_addr=int(rng.integers(0, 512 - ln)),
+                                  length=ln, rkey=mr.rkey))
+        eng.ring_sq_doorbell(qp, defer=True)
+    for _ in range(300):
+        eng.flush_doorbells()
+        relia = eng._reliability
+        if not any(qp.pending_count for qp in qps) and (
+                relia is None or relia.outstanding() == 0):
+            break
+    return eng
+
+clean = run()
+faulted = run(FaultInjector(3, drop=0.10, duplicate=0.05, corrupt=0.03))
+np.testing.assert_array_equal(np.asarray(faulted.transport.pool),
+                              np.asarray(clean.transport.pool))
+rel = faulted.stats["reliability"]
+assert rel["retransmits"] > 0 and rel["retx_pressure"] == 0, rel
+print("ICI_RELIABILITY_OK", rel["retransmits"])
+"""
+        env = dict(os.environ)
+        env["PYTHONPATH"] = SRC
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        r = subprocess.run([sys.executable, "-c", code], env=env,
+                           capture_output=True, text=True, timeout=560)
+        assert "ICI_RELIABILITY_OK" in r.stdout, r.stdout + r.stderr
