@@ -289,6 +289,55 @@ def main():
           f"QP {rqp2.state.value}, recoveries={rel['recovered']}")
     assert rqp2.state is QPState.RTS
 
+    # -- KV-SERVE: decode workers as transport clients ---------------------
+    # Disaggregated KV-cache serving over the same verbs: KV pages are
+    # MRs in a remote pool, a decode tenant fetches them with one-sided
+    # READs on its own QP (weight = SLO tier), and a compressed pool
+    # moves quantize-packed pages — 64/33 fewer wire words. Migration is
+    # ONE doorbell batch of READs that evicts a source page only after
+    # its SUCCESS CQE, so a lossy wire can never lose a page.
+    from repro.serve.kv_cache import (PagedKVPool, RemoteKVClient,
+                                      migrate_sequence, packed_page_words)
+
+    keng = RDMAEngine(n_peers=2, pool_size=8192, scheduler="drr")
+    kpool = PagedKVPool(keng, server, page_elems=256, max_pages=8)
+    krows = np.random.default_rng(0).standard_normal(
+        (2, 256)).astype(np.float32)
+    for row in krows:
+        kpool.write_page(kpool.append_page(seq_id=0), row)
+    kclient = RemoteKVClient(keng, client, kpool)
+    gold = kclient.register_tenant("gold", weight=2)
+    kb0 = keng.stats["qp_bytes"].get(gold.qp.qp_num, 0)
+    fetched = kclient.complete(kclient.fetch_sequence(gold, 0))
+    kwire = keng.stats["qp_bytes"][gold.qp.qp_num] - kb0
+    print(f"KV-SERVE: tenant '{gold.name}' (weight={gold.weight}) "
+          f"fetched {len(kpool.pages[0])} pages = {kwire} words over "
+          f"one-sided READs, parity={bool((fetched == krows).all())}")
+    assert (fetched == krows).all() and kwire == 2 * 256
+
+    zpool = PagedKVPool(keng, server, page_elems=256, max_pages=4,
+                        compressed=True)
+    zpool.write_page(zpool.append_page(seq_id=0), krows[0])
+    zclient = RemoteKVClient(keng, client, zpool)
+    bulk = zclient.register_tenant("bulk", weight=1)
+    zb0 = keng.stats["qp_bytes"].get(bulk.qp.qp_num, 0)
+    zfetched = zclient.complete(zclient.fetch_sequence(bulk, 0))
+    zwire = keng.stats["qp_bytes"][bulk.qp.qp_num] - zb0
+    zerr = float(np.abs(zfetched[0] - krows[0]).max())
+    print(f"KV-SERVE: compressed pool moved {zwire} words for a 256-elem "
+          f"page (= {packed_page_words(256)}: scales + packed int8 "
+          f"pairs) -> wire ratio {256 / zwire:.2f}x, "
+          f"max dequant err {zerr:.3f}")
+    assert zwire == 132
+
+    kdst = PagedKVPool(keng, client, page_elems=256, max_pages=8)
+    kqp = keng.create_qp(client, server)
+    moved = migrate_sequence(keng, TrafficRouter(), kpool, kdst, 0, kqp)
+    print(f"KV-SERVE: migrated {moved} pages in ONE doorbell batch "
+          f"(src evicted on SUCCESS CQEs only), "
+          f"ledger={keng.stats['kv_serve']}")
+    assert moved == 2 and kpool.allocated == 0
+
     # -- host_mem vs dev_mem placement (the -l flag) -----------------------
     eng.write_buffer(client, 0, np.ones(8, np.float32),
                      Placement.HOST_MEM)

@@ -1,8 +1,14 @@
-"""Batched serving with paged KV cache + RDMA page migration.
+"""Disaggregated serving: prefill node publishes KV pages to a remote
+pool, decode node fetches them over one-sided RDMA READs.
 
-Serves a small model with batched requests (prefill -> decode), then
-migrates a finished sequence's KV pages between peers as ONE doorbell
-batch of RDMA READs — the disaggregated prefill/decode pattern.
+The full handoff on one engine: prefill fills the caches, the prefill
+node publishes them as pages of a remote ``PagedKVPool``, and the decode
+node — a ``RemoteKVClient`` tenant with its own QP — fetches them back
+through the engine's shape-bucketed descriptor tables before decoding.
+Decoded tokens are bit-identical to keeping the caches local, the fetch
+moves each page byte over the wire ONCE (host staging would cross PCIe
+twice), and a migration under a 10% seeded drop profile loses zero
+pages.
 
     PYTHONPATH=src python examples/serve_decode.py
 """
@@ -13,11 +19,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import get_config
-from repro.core.rdma import RDMAEngine
+from repro.core.rdma import FaultInjector, RDMAEngine
 from repro.core.streaming.classifier import TrafficClass, TrafficRouter
 from repro.models import init_caches, init_params
 from repro.serve import decode_step, prefill_step
-from repro.serve.kv_cache import PagedKVPool, migrate_sequence
+from repro.serve.kv_cache import (PagedKVPool, RemoteKVClient,
+                                  flatten_cache_leaves, migrate_sequence,
+                                  unflatten_cache_leaves)
+
+PAGE_ELEMS = 256
 
 
 def main():
@@ -29,14 +39,34 @@ def main():
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size,
                                        (batch, prompt_len)), jnp.int32)
 
-    # ---- prefill ---------------------------------------------------------
+    # ---- prefill (the prefill node's job) --------------------------------
     caches = init_caches(cfg, batch, max_seq, jnp.float32)
     t0 = time.perf_counter()
     logits, caches = prefill_step(params, cfg, {"tokens": prompts}, caches)
     print(f"prefill: {batch} reqs x {prompt_len} tokens "
           f"in {(time.perf_counter()-t0)*1e3:.0f} ms")
 
-    # ---- decode (continuous batch of 8) -----------------------------------
+    # ---- publish -> fetch: caches through the remote KV pool -------------
+    n_words = int(flatten_cache_leaves(caches).size)
+    n_pages = -(-n_words // PAGE_ELEMS)
+    eng = RDMAEngine(n_peers=2, pool_size=4 * n_pages * PAGE_ELEMS)
+    router = TrafficRouter()
+    pool = PagedKVPool(eng, 0, page_elems=PAGE_ELEMS, max_pages=n_pages)
+    client = RemoteKVClient(eng, 1, pool, router=router)
+    gold = client.register_tenant("decode-gold", weight=2)
+
+    client.publish_caches(seq_id=0, caches=caches)
+    ticket = client.fetch_sequence(gold, 0)
+    fetched = client.complete(ticket)
+    caches = unflatten_cache_leaves(fetched.reshape(-1), caches)
+    wire = 4 * eng.stats["qp_bytes"][gold.qp.qp_num]
+    print(f"handoff: {n_pages} pages ({n_words} words) published, fetched "
+          f"over one-sided READs on tenant '{gold.name}' (weight="
+          f"{gold.weight}): wire={wire}B, host staging would be "
+          f"{2 * wire}B of PCIe, "
+          f"traffic={router.counters[TrafficClass.KV_PAGE]}")
+
+    # ---- decode on the FETCHED caches ------------------------------------
     step = jax.jit(lambda p, t, c, pos: decode_step(p, cfg, t, c, pos))
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     t0 = time.perf_counter()
@@ -48,25 +78,32 @@ def main():
         outs.append(tok)
     dt = time.perf_counter() - t0
     print(f"decode : {gen_len} steps, "
-          f"{batch*(gen_len-1)/dt:.1f} tokens/s (batched)")
+          f"{batch*(gen_len-1)/dt:.1f} tokens/s (batched, remote-fetched "
+          "caches)")
     print("sample :", jnp.concatenate(outs, 1)[0].tolist())
 
-    # ---- KV page migration (prefill node -> decode node) -------------------
-    eng = RDMAEngine(n_peers=2, pool_size=1 << 14)
-    router = TrafficRouter()
-    prefill_pool = PagedKVPool(eng, 0, page_elems=256, max_pages=16)
-    decode_pool = PagedKVPool(eng, 1, page_elems=256, max_pages=16)
+    # ---- KV page migration on a LOSSY fabric ------------------------------
+    meng = RDMAEngine(n_peers=2, pool_size=1 << 14)
+    meng.install_fault_injector(FaultInjector(seed=13, drop=0.10))
+    mrouter = TrafficRouter()
+    prefill_pool = PagedKVPool(meng, 0, page_elems=PAGE_ELEMS, max_pages=16)
+    decode_pool = PagedKVPool(meng, 1, page_elems=PAGE_ELEMS, max_pages=16)
     for _ in range(4):   # 4 KV pages for sequence 7
         p = prefill_pool.append_page(seq_id=7)
-        prefill_pool.write_page(p, rng.normal(size=256).astype(np.float32))
-    qp = eng.create_qp(1, 0)
-    eng.create_qp(0, 1)
-    d0 = eng.transport.dispatch_count
-    n = migrate_sequence(eng, router, prefill_pool, decode_pool, 7, qp)
-    print(f"migrate: {n} KV pages prefill->decode, "
-          f"{eng.transport.dispatch_count - d0} doorbell(s), "
-          f"traffic={router.counters[TrafficClass.KV_PAGE]}")
-    assert decode_pool.seq_len_pages(7) == 4
+        prefill_pool.write_page(p, rng.normal(size=PAGE_ELEMS)
+                                .astype(np.float32))
+    qp = meng.create_qp(1, 0)
+    d0 = meng.transport.dispatch_count
+    n = migrate_sequence(meng, mrouter, prefill_pool, decode_pool, 7, qp,
+                         max_flushes=128)
+    rel = meng.stats["reliability"]
+    print(f"migrate: {n}/4 KV pages prefill->decode over a 10%-loss wire "
+          f"({rel['retransmits']} retransmission(s)), "
+          f"{meng.transport.dispatch_count - d0} doorbell batch, "
+          f"traffic={mrouter.counters[TrafficClass.KV_PAGE]}")
+    assert decode_pool.seq_len_pages(7) == 4     # zero pages lost
+    assert prefill_pool.allocated == 0           # evicted on SUCCESS only
+    print("ledger :", meng.stats["kv_serve"])
     print("OK")
 
 

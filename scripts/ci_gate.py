@@ -154,6 +154,12 @@ def _run_reliability(out_json: str, smoke: bool = True) -> dict:
                                  out_json=out_json)
 
 
+def _run_kv_serve(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_kv_serve
+    return bench_kv_serve.run(verbose=True, smoke=smoke,
+                              out_json=out_json)
+
+
 GATES: Tuple[Gate, ...] = (
     Gate("transport", "BENCH_transport.json", "BENCH_transport.ci.json",
          rules=(
@@ -227,6 +233,33 @@ GATES: Tuple[Gate, ...] = (
              Rule("recovery.recovered_ok", "=="),
          ),
          runner=_run_reliability),
+    Gate("kv_serve", "BENCH_kv_serve.json", "BENCH_kv_serve.ci.json",
+         rules=(
+             # steady-state KV-page fetches + publishes ride warmed
+             # descriptor/QDMA shape buckets — zero new compiles, exactly
+             Rule("warm_descriptor_compiles", "<="),
+             Rule("warm_qdma_compiles", "<="),
+             # one-sided READ fetch moves each page byte over the wire
+             # once; host staging crosses PCIe twice — exactly 2.0x
+             Rule("bytes_moved_ratio", "==", 0.0),
+             Rule("fetch_parity", "=="),
+             # quantize-packed pools: 64/33 fewer wire words per page,
+             # byte-identical to the ref_quantize/ref_dequantize oracle
+             Rule("compression.wire_ratio", ">=", 0.05),
+             Rule("compression.parity", "=="),
+             # adversarial tenant (10x arrival tape + 10% seeded drop)
+             # must not skew the twin innocents: Jain exactly 1.0, and
+             # every completed fetch byte-exact
+             Rule("open_loop.innocent_jain", ">=", 0.0),
+             Rule("open_loop.no_pages_lost", "=="),
+             # migration on the lossy fabric: zero pages lost, the
+             # src+dst page ledger conserved, and a stalled responder
+             # rolls back cleanly with the source byte-intact
+             Rule("migration.no_pages_lost", "=="),
+             Rule("migration.ledger_conserved", "=="),
+             Rule("migration.error_path.src_intact", "=="),
+         ),
+         runner=_run_kv_serve),
 )
 
 

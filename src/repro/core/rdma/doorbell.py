@@ -245,6 +245,16 @@ class DoorbellCoalescer:
     """Accumulate posted WQEs; ring one doorbell when the batch is full.
 
     ``flush_threshold`` = n in the paper's batch-requests (they use n=50).
+
+    Context-manager contract: a CLEAN exit rings the doorbell for any
+    partial tail batch; exiting via an exception ABORTS it instead — the
+    not-yet-doorbelled WQEs are rescinded from the SQ so no later
+    doorbell (here or anywhere else: ``ring_sq_doorbell`` defaults to
+    covering every posted WQE) can execute a half-built batch. A KV
+    migration whose destination allocation raises ``MemoryError``
+    mid-loop must not ring for the pages it did manage to post. WQEs
+    already flushed by an earlier threshold crossing are beyond recall;
+    ``abort`` only rescinds the unrung tail.
     """
 
     def __init__(self, engine, qp, flush_threshold: int = 50):
@@ -264,11 +274,25 @@ class DoorbellCoalescer:
             self.engine.ring_sq_doorbell(self.qp)
             self._pending = 0
 
+    def abort(self) -> int:
+        """Rescind the unrung tail: pop the batched-but-unrung WQEs off
+        the SQ and rewind the producer index, so they are invisible to
+        every future doorbell. Returns how many were rescinded."""
+        n = self._pending
+        for _ in range(n):
+            self.qp.sq.pop()
+        self.qp.sq_pidx -= n
+        self._pending = 0
+        return n
+
     def __enter__(self):
         return self
 
-    def __exit__(self, *exc):
-        self.flush()
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.flush()
+        else:
+            self.abort()
         return False
 
 

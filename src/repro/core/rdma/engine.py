@@ -112,11 +112,14 @@ class RDMAEngine:
         # "dispatch" is the match→action plane's per-class ledger
         # (streaming.dispatch.StreamDispatcher): dispatch_rounds /
         # dispatch_mixed_rounds plus per-handler pkts/bursts/wqes.
+        # "kv_serve" is the disaggregated-KV serving ledger
+        # (serve.kv_cache): fetches/pages completed vs failed, QP
+        # recoveries, migration pages moved vs rolled back.
         self.stats = {"doorbells": 0, "wqes": 0, "cqes": 0, "errors": 0,
                       "coalesced_wqes": 0, "flushes": 0,
                       "qp_service": {}, "lc_service": {}, "lc_wqes": 0,
                       "qp_bytes": {}, "qp_latency_us": {},
-                      "lc_pipeline": {}, "dispatch": {},
+                      "lc_pipeline": {}, "dispatch": {}, "kv_serve": {},
                       "transport": self.transport.stats}
 
     # ------------------------------------------------------------------ MRs

@@ -192,6 +192,22 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
         out["dispatch_classes"] = float(len(dp.get("classes", {})))
         for name, ledger in dp.get("classes", {}).items():
             out[f"dispatch_pkts_{name}"] = float(ledger.get("pkts", 0))
+    # Disaggregated KV serving terms (serve.kv_cache): fetch outcome
+    # rates and the migration ledger — a rolled-back page is wire time
+    # spent without eviction progress.
+    kv = stats.get("kv_serve") or {}
+    if kv.get("fetches") or kv.get("migrations"):
+        fetches = kv.get("fetches", 0)
+        out["kv_fetches"] = float(fetches)
+        out["kv_pages_fetched"] = float(kv.get("pages_fetched", 0))
+        out["kv_fetch_fail_rate"] = (kv.get("failed", 0) / fetches
+                                     if fetches else 0.0)
+        out["kv_recoveries"] = float(kv.get("recoveries", 0))
+        out["kv_pages_migrated"] = float(kv.get("pages_migrated", 0))
+        out["kv_pages_rolled_back"] = float(
+            kv.get("pages_rolled_back", 0))
+        out["kv_fetch_wire_s"] = kv.get("posted_words", 0) * 4 \
+            / hw.line_rate
     # Reliability terms: with the lossy-fabric layer active, every
     # retransmit re-pays the steady-state WQE interval (wasted wire
     # time), RNR backoff idles the engine for modeled µs, and shed

@@ -42,7 +42,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.packet_parser import HDR_BYTES, parse_packets
-from repro.kernels.quantize_stream import quantize_stream
+from repro.kernels.quantize_stream import dequantize_stream, quantize_stream
 from repro.kernels.systolic_mm import systolic_mm
 
 MM_WORKLOAD = 0x10
@@ -224,6 +224,32 @@ def _quant_bucketed(x: np.ndarray, interpret: bool):
     padded[:n] = x
     q, s = _stream_quant(bp, interpret)(jnp.asarray(padded))
     return q[:n], s[:n]
+
+
+@functools.lru_cache(maxsize=None)
+def _stream_dequant(bp: int, interpret: bool):
+    """Jitted inverse of ``_stream_quant`` per pow2 row bucket: the KV
+    serving client decompresses every fetched page with it, so
+    steady-state decode must not re-trace the Pallas call per fetch."""
+    import jax
+    return jax.jit(functools.partial(dequantize_stream,
+                                     interpret=interpret))
+
+
+def _dequant_bucketed(q: np.ndarray, s: np.ndarray,
+                      interpret: bool) -> np.ndarray:
+    """Pad (n, 64) int8 rows + their scales to the pow2 row bucket,
+    dequantize with the cached jitted program, slice the live rows
+    (row-wise kernel: padding never changes a live row's bytes)."""
+    n = q.shape[0]
+    bp = _next_pow2(n)
+    qpad = np.zeros((bp, HDR_BYTES), np.int8)
+    qpad[:n] = q
+    spad = np.ones((bp, 1), np.float32)
+    spad[:n] = s
+    out = _stream_dequant(bp, interpret)(jnp.asarray(qpad),
+                                         jnp.asarray(spad))
+    return np.asarray(out[:n])
 
 
 def lc_quantize_stream(ctx, ring_peer, ring_rkey, ring_base,

@@ -1,1 +1,5 @@
+from repro.serve.kv_cache import (  # noqa: F401
+    FetchTicket, KVFetchError, KVTenant, Page, PagedKVPool,
+    RemoteKVClient, migrate_sequence,
+)
 from repro.serve.serve_step import decode_step, greedy_generate, prefill_step  # noqa: F401

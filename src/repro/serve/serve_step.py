@@ -67,12 +67,25 @@ def decode_step(params, cfg: ModelConfig, tokens: jax.Array, caches,
 
 
 def greedy_generate(params, cfg: ModelConfig, prompt: jax.Array,
-                    max_new: int, max_seq: int, dtype=jnp.float32):
-    """Simple greedy loop for examples/tests (prefill + decode)."""
+                    max_new: int, max_seq: int, dtype=jnp.float32,
+                    kv_client=None, kv_seq_id: int = 0, kv_tenant=None):
+    """Simple greedy loop for examples/tests (prefill + decode).
+
+    With ``kv_client`` (a ``serve.kv_cache.RemoteKVClient``), the
+    prefill-filled caches take the disaggregated-serving handoff before
+    decode: published as pages into the remote KV pool, then fetched
+    back over one-sided READ WQEs on ``kv_tenant``'s QP through the
+    engine's shape-bucketed descriptor tables. Decode runs on the
+    fetched caches — bit-identical tokens for uncompressed f32 pools,
+    and zero steady-state XLA compiles on the fetch path (the pages are
+    pow2 chunk buckets).
+    """
     b, s = prompt.shape
     caches = init_caches(cfg, b, max_seq, dtype)
     logits, caches = prefill_step(
         params, cfg, {"tokens": prompt}, caches)
+    if kv_client is not None:
+        caches = kv_client.roundtrip_caches(kv_seq_id, caches, kv_tenant)
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None]
     outs = [tok]
 

@@ -92,7 +92,8 @@ class TestInjectedRegression:
         names = {g.baseline for g in ci_gate.GATES}
         assert names == {"BENCH_transport.json", "BENCH_fairness.json",
                          "BENCH_lc_offload.json", "BENCH_streaming.json",
-                         "BENCH_dispatch.json", "BENCH_reliability.json"}
+                         "BENCH_dispatch.json", "BENCH_reliability.json",
+                         "BENCH_kv_serve.json"}
         for g in ci_gate.GATES:
             compile_rules = [r for r in g.rules if "compile" in r.key]
             assert compile_rules, f"{g.name} gates no compile counts"
@@ -157,6 +158,52 @@ class TestInjectedRegression:
                 ("fairness.host_jain_while_victim_retx", 0.4),
                 ("recovery.terminal_cqes_not_exceptions", False),
                 ("recovery.recovered_ok", False)):
+            rec = json.loads(json.dumps(base))
+            node = rec
+            *parents, leaf = key.split(".")
+            for p in parents:
+                node = node[p]
+            node[leaf] = bad
+            msgs = check_gate(g, rec, base)
+            assert len(msgs) == 1 and key in msgs[0], (key, msgs)
+
+    def test_kv_serve_gate_pins_serving_keys(self):
+        """The kv_serve gate's schema: zero-tolerance steady-state
+        compile counts, the exact 2.0x host-staging bytes ratio, fetch
+        and compression parity, the adversary-proof innocent Jain, and
+        the migration no-loss/ledger/error-path contract — injecting a
+        regression into each key fails on exactly that key."""
+        g = next(g for g in ci_gate.GATES if g.name == "kv_serve")
+        keys = {r.key for r in g.rules}
+        assert {"warm_descriptor_compiles", "warm_qdma_compiles",
+                "bytes_moved_ratio", "fetch_parity",
+                "compression.wire_ratio", "compression.parity",
+                "open_loop.innocent_jain", "open_loop.no_pages_lost",
+                "migration.no_pages_lost", "migration.ledger_conserved",
+                "migration.error_path.src_intact"} <= keys
+        ratio = next(r for r in g.rules if r.key == "bytes_moved_ratio")
+        assert ratio.direction == "==" and ratio.tolerance == 0.0
+        base = {"warm_descriptor_compiles": 0, "warm_qdma_compiles": 0,
+                "bytes_moved_ratio": 2.0, "fetch_parity": True,
+                "compression": {"wire_ratio": 1.939, "parity": True},
+                "open_loop": {"innocent_jain": 1.0,
+                              "no_pages_lost": True},
+                "migration": {"no_pages_lost": True,
+                              "ledger_conserved": True,
+                              "error_path": {"src_intact": True}}}
+        assert check_gate(g, json.loads(json.dumps(base)), base) == []
+        for key, bad in (
+                ("warm_descriptor_compiles", 2),
+                ("warm_qdma_compiles", 1),
+                ("bytes_moved_ratio", 1.0),
+                ("fetch_parity", False),
+                ("compression.wire_ratio", 1.0),
+                ("compression.parity", False),
+                ("open_loop.innocent_jain", 0.9),
+                ("open_loop.no_pages_lost", False),
+                ("migration.no_pages_lost", False),
+                ("migration.ledger_conserved", False),
+                ("migration.error_path.src_intact", False)):
             rec = json.loads(json.dumps(base))
             node = rec
             *parents, leaf = key.split(".")

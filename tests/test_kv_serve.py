@@ -1,0 +1,377 @@
+"""Disaggregated KV-cache serving (``serve.kv_cache``) + the serve-layer
+data-loss fixes: the DoorbellCoalescer exception-path contract, dtype-
+derived byte billing, reliability-aware migration (evict-on-SUCCESS,
+rollback, error surfacing), decode workers as transport clients over
+one-sided READs, tenant isolation, and the prefill->decode handoff."""
+import numpy as np
+import pytest
+
+from repro.core.rdma import (CQEStatus, DoorbellCoalescer, FaultInjector,
+                             Opcode, QPState, RDMAEngine,
+                             ReliabilityConfig, WQE)
+from repro.core.streaming import TrafficClass, TrafficRouter
+from repro.serve.kv_cache import (KVFetchError, PagedKVPool,
+                                  RemoteKVClient, migrate_sequence,
+                                  packed_page_words, quant_pack_page,
+                                  quant_unpack_page)
+
+PE = 64           # page elems used throughout (one pow2 bucket)
+
+
+@pytest.fixture
+def eng():
+    return RDMAEngine(n_peers=2, pool_size=1 << 14)
+
+
+def _filled_pool(eng, peer, n_pages, seq_id=7, seed=0, **kw):
+    pool = PagedKVPool(eng, peer, page_elems=PE, max_pages=n_pages, **kw)
+    data = np.random.default_rng(seed).standard_normal(
+        (n_pages, PE)).astype(np.float32)
+    for row in data:
+        pool.write_page(pool.append_page(seq_id), row)
+    return pool, data
+
+
+class TestCoalescerExceptionPath:
+    """The seed's ``__exit__`` flushed the pending batch even when
+    leaving via an exception — ringing the doorbell for a half-built
+    migration. Now: clean exit flushes, exception exit aborts."""
+
+    def _wqe(self, qp, mr, i):
+        return WQE(Opcode.READ, qp.qp_num, wr_id=100 + i,
+                   local_addr=1024 + 4 * i, remote_addr=4 * i,
+                   length=4, rkey=mr.rkey)
+
+    def test_clean_exit_flushes_tail(self, eng):
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 256)
+        eng.write_buffer(1, 0, np.arange(16, dtype=np.float32))
+        d0 = eng.transport.dispatch_count
+        with DoorbellCoalescer(eng, qp, flush_threshold=50) as db:
+            for i in range(3):
+                db.post(self._wqe(qp, mr, i))
+        assert eng.transport.dispatch_count - d0 == 1
+        assert len(eng.poll_cq(qp, 8)) == 3
+
+    def test_exception_aborts_unrung_tail(self, eng):
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 256)
+        eng.write_buffer(1, 0, np.arange(16, dtype=np.float32))
+        eng.write_buffer(0, 1024, np.zeros(12, np.float32))
+        pidx0, d0 = qp.sq_pidx, eng.transport.dispatch_count
+        with pytest.raises(RuntimeError, match="mid-batch"):
+            with DoorbellCoalescer(eng, qp, flush_threshold=50) as db:
+                for i in range(3):
+                    db.post(self._wqe(qp, mr, i))
+                raise RuntimeError("mid-batch failure")
+        # the batched WQEs are rescinded: SQ empty, producer index
+        # rewound, and no future doorbell can execute them
+        assert len(qp.sq) == 0 and qp.sq_pidx == pidx0
+        eng.flush_doorbells()
+        assert eng.transport.dispatch_count == d0
+        assert eng.poll_cq(qp, 8) == []
+        np.testing.assert_array_equal(eng.read_buffer(0, 1024, 12),
+                                      np.zeros(12, np.float32))
+
+    def test_threshold_flushed_wqes_survive_abort(self, eng):
+        """WQEs already rung by a threshold crossing are beyond recall;
+        only the unrung tail is rescinded."""
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 256)
+        eng.write_buffer(1, 0, np.arange(16, dtype=np.float32))
+        with pytest.raises(RuntimeError):
+            with DoorbellCoalescer(eng, qp, flush_threshold=2) as db:
+                for i in range(3):          # 2 flushed, 1 pending
+                    db.post(self._wqe(qp, mr, i))
+                raise RuntimeError("after threshold crossing")
+        cqes = eng.poll_cq(qp, 8)
+        assert [c.wr_id for c in cqes] == [100, 101]
+        assert all(c.status is CQEStatus.SUCCESS for c in cqes)
+        assert len(qp.sq) == 0
+
+    def test_explicit_abort(self, eng):
+        qp = eng.create_qp(0, 1)
+        mr = eng.register_mr(1, 0, 256)
+        db = DoorbellCoalescer(eng, qp, flush_threshold=50)
+        for i in range(4):
+            db.post(self._wqe(qp, mr, i))
+        assert db.abort() == 4
+        assert len(qp.sq) == 0 and db._pending == 0
+        db.flush()                          # no-op after abort
+        assert eng.poll_cq(qp, 8) == []
+
+
+class TestDtypeBilling:
+    """The seed billed every page ``mr.length * 4``; bytes now derive
+    from the pool's element dtype (and the packed payload when
+    compressed)."""
+
+    def test_page_nbytes_by_dtype(self, eng):
+        import jax.numpy as jnp
+        for dt, per_elem in ((np.int8, 1), (jnp.bfloat16, 2),
+                             (np.float32, 4)):
+            pool = PagedKVPool(eng, 0, page_elems=PE, max_pages=1,
+                               dtype=dt)
+            assert pool.page_nbytes == PE * per_elem
+            assert pool.append_page(0).nbytes == PE * per_elem
+            pool.evict(0)
+
+    def test_compressed_bills_packed_payload(self, eng):
+        pool = PagedKVPool(eng, 0, page_elems=PE, max_pages=1,
+                           compressed=True)
+        assert pool.page_words == packed_page_words(PE) == PE // 64 + PE // 2
+        assert pool.page_nbytes == PE + 4 * (PE // 64)   # int8 + scales
+
+    def test_migration_routes_dtype_true_bytes(self, eng):
+        src, _ = _filled_pool(eng, 0, 3, dtype=np.int8)
+        dst = PagedKVPool(eng, 1, page_elems=PE, max_pages=3,
+                          dtype=np.int8)
+        router = TrafficRouter()
+        qp = eng.create_qp(1, 0)
+        assert migrate_sequence(eng, router, src, dst, 7, qp) == 3
+        kv = router.counters[TrafficClass.KV_PAGE]
+        assert kv["count"] == 3
+        assert kv["bytes"] == 3 * PE * 1    # int8: 1 byte/elem, not *4
+
+
+class TestMigration:
+    def test_no_loss_under_seeded_drop(self, eng):
+        """10% drop: retransmission absorbs the loss; every page moves,
+        byte-exactly, and the ledger balances."""
+        eng.install_fault_injector(FaultInjector(seed=13, drop=0.10))
+        src, data = _filled_pool(eng, 0, 5)
+        dst = PagedKVPool(eng, 1, page_elems=PE, max_pages=5)
+        qp = eng.create_qp(1, 0)
+        moved = migrate_sequence(eng, TrafficRouter(), src, dst, 7, qp,
+                                 max_flushes=128)
+        assert moved == 5 and src.seq_len_pages(7) == 0
+        assert src.allocated == 0 and dst.allocated == 5
+        got = np.stack([dst.read_page(p) for p in dst.pages[7]])
+        np.testing.assert_array_equal(got, data)
+        led = eng.stats["kv_serve"]
+        assert led["pages_migrated"] == 5
+        assert led["pages_rolled_back"] == 0
+
+    def test_stalled_peer_rolls_back_and_surfaces_errored_qp(self, eng):
+        """Responder stall + tiny retry budget: nothing moves, every
+        destination page is rolled back, the source stays byte-intact,
+        and the errored QP is surfaced (not hidden)."""
+        inj = eng.install_fault_injector(
+            FaultInjector(seed=3),
+            ReliabilityConfig(retry_cnt=1, timeout_flushes=1))
+        inj.stall_peer(0)
+        src, data = _filled_pool(eng, 0, 3)
+        dst = PagedKVPool(eng, 1, page_elems=PE, max_pages=3)
+        qp = eng.create_qp(1, 0)
+        moved = migrate_sequence(eng, TrafficRouter(), src, dst, 7, qp,
+                                 max_flushes=32)
+        assert moved == 0
+        assert src.seq_len_pages(7) == 3 and dst.allocated == 0
+        got = np.stack([src.read_page(p) for p in src.pages[7]])
+        np.testing.assert_array_equal(got, data)
+        assert qp.state is QPState.ERROR
+        # caller-driven recovery: unstall, re-arm, retry the remainder
+        inj.unstall_peer(0)
+        eng.recover_qp(qp)
+        assert migrate_sequence(eng, TrafficRouter(), src, dst, 7, qp,
+                                max_flushes=64) == 3
+        assert src.allocated == 0 and dst.seq_len_pages(7) == 3
+
+    def test_partial_failure_keeps_failed_page_at_source(self, eng):
+        """An invalidated source MR fails exactly its own READ: the
+        succeeded pages move, the failed page survives at the source
+        (the seed evicted it — silent loss), nothing is double-counted."""
+        src, data = _filled_pool(eng, 0, 5)
+        bad = src.pages[7][-1]              # last in posting order
+        eng.invalidate_mr(bad.mr.rkey)
+        dst = PagedKVPool(eng, 1, page_elems=PE, max_pages=5)
+        qp = eng.create_qp(1, 0)
+        moved = migrate_sequence(eng, TrafficRouter(), src, dst, 7, qp)
+        assert 0 < moved < 5
+        # conservation: every page is in exactly one pool
+        assert src.seq_len_pages(7) + dst.seq_len_pages(7) == 5
+        assert src.allocated + dst.allocated == 5
+        assert bad in src.pages[7]          # the failed page never left
+        for p in dst.pages[7]:              # movers are byte-exact
+            np.testing.assert_array_equal(dst.read_page(p),
+                                          data[p.page_idx])
+        led = eng.stats["kv_serve"]
+        assert led["pages_migrated"] == moved
+        assert led["pages_rolled_back"] == 5 - moved
+
+    def test_memory_error_aborts_doorbell_and_rolls_back(self, eng):
+        """Destination exhaustion mid-batch: the unrung doorbell is
+        aborted (nothing executes), allocated dst pages are rolled
+        back, the MemoryError propagates, and the source is untouched."""
+        src, data = _filled_pool(eng, 0, 4)
+        dst = PagedKVPool(eng, 1, page_elems=PE, max_pages=2)
+        qp = eng.create_qp(1, 0)
+        d0 = eng.transport.dispatch_count
+        with pytest.raises(MemoryError):
+            migrate_sequence(eng, TrafficRouter(), src, dst, 7, qp)
+        assert eng.transport.dispatch_count == d0   # no doorbell rang
+        assert eng.poll_cq(qp, 16) == []
+        assert dst.allocated == 0 and len(qp.sq) == 0
+        assert src.seq_len_pages(7) == 4
+        got = np.stack([src.read_page(p) for p in src.pages[7]])
+        np.testing.assert_array_equal(got, data)
+
+
+class TestRemoteFetch:
+    def test_fetch_parity_and_zero_warm_compiles(self, eng):
+        pool, data = _filled_pool(eng, 0, 3, seq_id=0)
+        pool.max_pages = 6
+        rows2 = np.random.default_rng(9).standard_normal(
+            (3, PE)).astype(np.float32)
+        for row in rows2:
+            pool.write_page(pool.append_page(1), row)
+        client = RemoteKVClient(eng, 1, pool)
+        t = client.register_tenant("gold", weight=2)
+        np.testing.assert_array_equal(
+            client.complete(client.fetch_sequence(t, 0)), data)  # warm
+        c0 = eng.stats["transport"]["compiles"]
+        q0 = eng.stats["transport"]["qdma_compiles"]
+        got = client.complete(client.fetch_sequence(t, 1))
+        assert eng.stats["transport"]["compiles"] == c0
+        assert eng.stats["transport"]["qdma_compiles"] == q0
+        np.testing.assert_array_equal(got, rows2)
+        assert client.staging.utilization() == 0.0   # staging freed
+        led = eng.stats["kv_serve"]
+        assert led["fetches"] == led["completed"] == 2
+        assert led["pages_fetched"] == 6 and led["failed"] == 0
+
+    def test_compressed_fetch_matches_quant_oracle(self, eng):
+        from repro.kernels import ref
+        import jax.numpy as jnp
+        pool, _ = _filled_pool(eng, 0, 2, seq_id=0, compressed=True)
+        x = np.random.default_rng(0).standard_normal(
+            (2, PE)).astype(np.float32)          # same rows as seed 0
+        client = RemoteKVClient(eng, 1, pool)
+        t = client.register_tenant("bulk")
+        got = client.complete(client.fetch_sequence(t, 0))
+        q, s = ref.ref_quantize(jnp.asarray(x.reshape(-1, 64)))
+        want = np.asarray(ref.ref_dequantize(q, s)).reshape(2, PE)
+        np.testing.assert_array_equal(got, want)
+        # wire moved the packed words, not the logical page
+        assert pool.page_words == packed_page_words(PE)
+
+    def test_pack_roundtrip_is_exact_in_pool_words(self):
+        x = np.random.default_rng(4).standard_normal(PE).astype(np.float32)
+        words = quant_pack_page(x)
+        assert words.shape == (packed_page_words(PE),)
+        back = quant_unpack_page(words, PE)
+        import jax.numpy as jnp
+        from repro.kernels import ref
+        q, s = ref.ref_quantize(jnp.asarray(x.reshape(-1, 64)))
+        np.testing.assert_array_equal(
+            back, np.asarray(ref.ref_dequantize(q, s)).reshape(-1))
+
+    def test_unknown_sequence_raises_keyerror(self, eng):
+        pool, _ = _filled_pool(eng, 0, 1, seq_id=0)
+        client = RemoteKVClient(eng, 1, pool)
+        t = client.register_tenant("t")
+        with pytest.raises(KeyError, match="seq 99"):
+            client.fetch_sequence(t, 99)
+
+    def test_staging_exhaustion_is_admission_control(self, eng):
+        pool, _ = _filled_pool(eng, 0, 2, seq_id=0)
+        client = RemoteKVClient(eng, 1, pool, staging_size=PE)
+        t = client.register_tenant("t")
+        with pytest.raises(MemoryError):     # 2 pages > PE staging words
+            client.fetch_sequence(t, 0)
+        assert len(t.qp.sq) == 0             # nothing half-posted
+
+    def test_failed_fetch_surfaces_then_recovers(self, eng):
+        """Stalled responder: retry exhaustion resolves the ticket with
+        terminal CQEs (data=None, KVFetchError on complete); after the
+        stall clears, ``complete(recover=True)`` re-arms the QP and the
+        refetch is byte-exact. Source pages were never touched."""
+        inj = eng.install_fault_injector(
+            FaultInjector(seed=3),
+            ReliabilityConfig(retry_cnt=1, timeout_flushes=1))
+        pool, data = _filled_pool(eng, 0, 2, seq_id=0)
+        client = RemoteKVClient(eng, 1, pool)
+        t = client.register_tenant("t")
+        inj.stall_peer(0)
+        tk = client.fetch_sequence(t, 0)
+        for _ in range(16):
+            eng.flush_doorbells()
+            client.advance(t)
+            if tk.outstanding == 0:
+                break
+        assert tk.outstanding == 0 and tk.data is None
+        assert t.qp.state is QPState.ERROR
+        inj.unstall_peer(0)
+        got = client.complete(tk, recover=True)
+        np.testing.assert_array_equal(got, data)
+        led = eng.stats["kv_serve"]
+        assert led["recoveries"] == 1 and led["failed"] == 1
+        assert led["completed"] == 1 and pool.seq_len_pages(0) == 2
+
+
+class TestTenantIsolation:
+    def test_innocents_stay_jain_one_under_adversary(self):
+        """Two gold innocents with identical demand + one bronze
+        adversary with a deep backlog and a 10% drop profile scoped to
+        its QP: after drain, innocent service is exactly even."""
+        from repro.core.rdma.cost_model import jain_fairness_index
+        eng = RDMAEngine(n_peers=2, pool_size=1 << 14, scheduler="drr",
+                         flush_budget=8)
+        pool, data = _filled_pool(eng, 0, 4, seq_id=0)
+        client = RemoteKVClient(eng, 1, pool)
+        inn1 = client.register_tenant("inn1", weight=2)
+        inn2 = client.register_tenant("inn2", weight=2)
+        adv = client.register_tenant("adv", weight=1)
+        eng.install_fault_injector(FaultInjector(
+            seed=11, drop=0.10, only_qps=[adv.qp.qp_num]))
+        tickets = []
+        for _ in range(3):
+            tickets.append(client.fetch_sequence(inn1, 0, defer=True))
+            tickets.append(client.fetch_sequence(inn2, 0, defer=True))
+            for _ in range(5):
+                tickets.append(client.fetch_sequence(adv, 0, defer=True))
+        for _ in range(400):
+            eng.flush_doorbells()
+            for t in (inn1, inn2, adv):
+                client.advance(t)
+            if all(tk.outstanding == 0 for tk in tickets):
+                break
+        assert all(tk.outstanding == 0 for tk in tickets)
+        for tk in tickets:                   # zero pages lost anywhere
+            np.testing.assert_array_equal(tk.data, data)
+        svc = [eng.stats["qp_service"][t.qp.qp_num] for t in (inn1, inn2)]
+        assert svc[0] == svc[1]
+        assert jain_fairness_index(svc) == 1.0
+
+
+@pytest.mark.slow
+class TestDecodeHandoff:
+    def test_greedy_decode_bit_identical_through_remote_pool(self):
+        """prefill -> publish_caches -> one-sided-READ fetch -> decode
+        produces the same tokens as keeping the caches local."""
+        import jax
+        from repro.configs.registry import get_config
+        from repro.models import init_caches, init_params
+        from repro.serve import greedy_generate
+
+        cfg = get_config("tiny")
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        prompt = jax.numpy.asarray(
+            np.random.default_rng(0).integers(
+                0, cfg.vocab_size, (1, 8)), jax.numpy.int32)
+        base = greedy_generate(params, cfg, prompt, max_new=4, max_seq=32)
+
+        from repro.serve.kv_cache import flatten_cache_leaves
+        n_words = flatten_cache_leaves(
+            init_caches(cfg, 1, 32, jax.numpy.float32)).size
+        n_pages = -(-int(n_words) // PE)
+        eng = RDMAEngine(n_peers=2, pool_size=4 * n_pages * PE)
+        pool = PagedKVPool(eng, 0, page_elems=PE, max_pages=n_pages)
+        client = RemoteKVClient(eng, 1, pool)
+        t = client.register_tenant("decode", weight=2)
+        out = greedy_generate(params, cfg, prompt, max_new=4, max_seq=32,
+                              kv_client=client, kv_seq_id=0, kv_tenant=t)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(base))
+        assert pool.allocated == 0           # roundtrip evicted the seq
+        led = eng.stats["kv_serve"]
+        assert led["pages_fetched"] == n_pages and led["failed"] == 0
