@@ -43,10 +43,10 @@ def _leaf_sizes(arch: str):
         stacked = any(s in path for s in ("layers/", "enc_layers/",
                                           "dec_layers/"))
         if stacked and leaf.ndim >= 1:
-            per_layer = leaf.size // leaf.shape[0] * 4
+            per_layer = leaf.size // leaf.shape[0] * leaf.dtype.itemsize
             sizes.extend([per_layer] * leaf.shape[0])
         else:
-            sizes.append(leaf.size * 4)
+            sizes.append(leaf.size * leaf.dtype.itemsize)
     return sizes
 
 

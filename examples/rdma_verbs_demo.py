@@ -338,6 +338,31 @@ def main():
           f"ledger={keng.stats['kv_serve']}")
     assert moved == 2 and kpool.allocated == 0
 
+    # -- COLLECTIVES: gradient all-reduce as scheduled verbs ---------------
+    # Training comm on the SAME engine kind serving uses: a ring
+    # all-reduce is 2(n-1) rounds of one-sided chunk READs, one deferred
+    # doorbell flush per round, host partial-reduces between rounds.
+    from repro.train.collectives import RDMACollective, ideal_wire_words
+
+    ceng = RDMAEngine(n_peers=4, pool_size=4096, scheduler="drr")
+    coll = RDMACollective(ceng, 4, algorithm="ring", pipeline_depth=2)
+    crng = np.random.default_rng(1)
+    grads = [[crng.integers(-8, 9, 256).astype(np.float32)
+              for _ in range(4)] for _ in range(2)]     # 2 buckets
+    summed = coll.all_reduce_buckets(grads)
+    parity = all(
+        np.array_equal(summed[b][p], np.sum(grads[b], axis=0))
+        for b in range(2) for p in range(4))
+    led = ceng.stats["collectives"]
+    print(f"COLLECTIVES: ring all-reduce of 2 buckets x 256 words over "
+          f"4 peers: {led['rounds']} rounds in {led['flushes']} flushes "
+          f"({led['overlapped_flushes']} overlapped), "
+          f"{led['wire_words']} wire words "
+          f"(ideal {2 * ideal_wire_words('ring', 4, 256)}), "
+          f"parity={parity}")
+    assert parity and led["overlapped_flushes"] > 0
+    assert led["wire_words"] == 2 * ideal_wire_words("ring", 4, 256)
+
     # -- host_mem vs dev_mem placement (the -l flag) -----------------------
     eng.write_buffer(client, 0, np.ones(8, np.float32),
                      Placement.HOST_MEM)

@@ -160,6 +160,12 @@ def _run_kv_serve(out_json: str, smoke: bool = True) -> dict:
                               out_json=out_json)
 
 
+def _run_collectives(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_collectives
+    return bench_collectives.run(verbose=True, smoke=smoke,
+                                 out_json=out_json)
+
+
 GATES: Tuple[Gate, ...] = (
     Gate("transport", "BENCH_transport.json", "BENCH_transport.ci.json",
          rules=(
@@ -260,6 +266,27 @@ GATES: Tuple[Gate, ...] = (
              Rule("migration.error_path.src_intact", "=="),
          ),
          runner=_run_kv_serve),
+    Gate("collectives", "BENCH_collectives.json",
+         "BENCH_collectives.ci.json",
+         rules=(
+             # steady-state gradient all-reduce steps ride warmed
+             # descriptor/QDMA shape buckets — zero new compiles, exactly
+             Rule("warm_descriptor_compiles", "<="),
+             Rule("warm_qdma_compiles", "<="),
+             # ring wire words match the α–β ideal (2(n-1)/n per peer)
+             # and both algorithms stay byte-identical to the oracle
+             Rule("ring.wire_ratio", "==", 0.02),
+             Rule("ring.parity", "=="),
+             Rule("rd.parity", "=="),
+             # pipelined buckets must actually share flushes
+             Rule("overlap.overlap_fraction", ">=", 0.1),
+             # training comm is an ordinary DRR tenant: equal-weight
+             # serving QPs split the engine exactly while it streams
+             Rule("fairness.serving_jain", ">=", 0.0),
+             # 10% seeded drop: retransmitted chunks stay byte-exact
+             Rule("chaos.parity_10pct_drop", "=="),
+         ),
+         runner=_run_collectives),
 )
 
 

@@ -323,6 +323,91 @@ def plan_buckets(leaf_sizes_bytes: Sequence[int],
     return buckets
 
 
+# ---------------------------------------------------------------------------
+# Collective round schedules (multi-peer, multi-round transfer plans)
+# ---------------------------------------------------------------------------
+#
+# Every workload before PR 8 was point-to-point: one initiator, one
+# responder, rounds independent. A collective is the first schedule-LEVEL
+# dependency the engine sees — round k's READ operands are round k-1's
+# write-backs — so the plan is expressed as an ordered list of ROUNDS,
+# each round a list of (phase, peer, src_peer, chunk) transfer entries
+# that are mutually independent and may share one descriptor-table flush.
+# ``chunk`` indexes a 1/n slice of the padded vector; ``chunk == -1``
+# means the full vector (recursive doubling moves whole vectors).
+# Phases: "rs" (reduce-scatter: READ then host-reduce), "ag" (all-gather:
+# READ into place), "fold"/"xor" (recursive doubling reduce READs),
+# "bcast" (non-pow2 extras READ the final vector).
+
+def plan_ring_reduce_scatter(n_peers: int) -> List[List[tuple]]:
+    """Ring reduce-scatter rounds: in round r, peer p READs chunk
+    ``(p - r - 1) mod n`` from its left neighbor ``(p - 1) mod n`` and
+    host-reduces it into its own copy. After n-1 rounds peer p owns the
+    fully reduced chunk ``(p + 1) mod n``. Each peer moves (n-1)/n of
+    the vector — the bandwidth-optimal half of the ring α–β model."""
+    return [[("rs", p, (p - 1) % n_peers, (p - r - 1) % n_peers)
+             for p in range(n_peers)]
+            for r in range(n_peers - 1)]
+
+
+def plan_ring_all_gather(n_peers: int) -> List[List[tuple]]:
+    """Ring all-gather rounds: in round r, peer p READs chunk
+    ``(p - r) mod n`` from its left neighbor directly into place (no
+    reduce — the neighbor already holds it final). Round 0 copies the
+    neighbor's OWNED chunk, later rounds relay what arrived earlier."""
+    return [[("ag", p, (p - 1) % n_peers, (p - r) % n_peers)
+             for p in range(n_peers)]
+            for r in range(n_peers - 1)]
+
+
+def plan_ring_allreduce(n_peers: int) -> List[List[tuple]]:
+    """Full ring all-reduce: reduce-scatter then all-gather — 2(n-1)
+    rounds, 2(n-1)/n of the vector on the wire per peer (exactly the
+    ``predicted_sync_time`` wire term)."""
+    return plan_ring_reduce_scatter(n_peers) + plan_ring_all_gather(n_peers)
+
+
+def plan_rd_allreduce(n_peers: int) -> List[List[tuple]]:
+    """Recursive-doubling all-reduce: latency-optimal (log2 rounds) at
+    full-vector bandwidth per round. Non-pow2 peer counts fold the
+    ``extras`` (peers m..n-1, m the largest pow2 <= n) into the core
+    first and broadcast the result back out last."""
+    m = 1
+    while m * 2 <= n_peers:
+        m *= 2
+    extras = n_peers - m
+    rounds: List[List[tuple]] = []
+    if extras:
+        rounds.append([("fold", i, m + i, -1) for i in range(extras)])
+    k = 1
+    while k < m:
+        rounds.append([("xor", p, p ^ k, -1) for p in range(m)])
+        k *= 2
+    if extras:
+        rounds.append([("bcast", m + i, i, -1) for i in range(extras)])
+    return rounds
+
+
+def collective_wire_words(algorithm: str, n_peers: int,
+                          padded_words: int) -> int:
+    """Exact pool words a schedule moves over the wire (all peers
+    summed) — the denominator of the bench's wire-ratio gate. Ring:
+    2(n-1) rounds x n peers x a 1/n chunk. Recursive doubling:
+    log2(m) rounds x m peers x the full vector, plus one fold and one
+    broadcast of the full vector per extra peer."""
+    if n_peers <= 1:
+        return 0
+    if algorithm == "ring":
+        return 2 * (n_peers - 1) * padded_words
+    if algorithm == "rd":
+        m = 1
+        while m * 2 <= n_peers:
+            m *= 2
+        log2m = m.bit_length() - 1
+        return (log2m * m + 2 * (n_peers - m)) * padded_words
+    raise ValueError(f"algorithm must be ring|rd, got {algorithm!r}")
+
+
 def predicted_sync_time(n_dispatches: int, total_bytes: int,
                         n_devices: int, alpha_s: float,
                         link_bw: float) -> float:

@@ -120,6 +120,7 @@ class RDMAEngine:
                       "qp_service": {}, "lc_service": {}, "lc_wqes": 0,
                       "qp_bytes": {}, "qp_latency_us": {},
                       "lc_pipeline": {}, "dispatch": {}, "kv_serve": {},
+                      "collectives": {},
                       "transport": self.transport.stats}
 
     # ------------------------------------------------------------------ MRs

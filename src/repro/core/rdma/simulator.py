@@ -208,6 +208,23 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
             kv.get("pages_rolled_back", 0))
         out["kv_fetch_wire_s"] = kv.get("posted_words", 0) * 4 \
             / hw.line_rate
+    # Collective terms (train.collectives): gradient-bucket all-reduce
+    # wire/reduce time and the overlap ledger — overlapped flushes are
+    # doorbell startups amortized across in-flight buckets.
+    col = stats.get("collectives") or {}
+    if col.get("rounds"):
+        out["collective_rounds"] = float(col["rounds"])
+        out["collective_buckets"] = float(col.get("buckets", 0))
+        out["collective_wire_bytes"] = float(col.get("wire_bytes", 0))
+        out["collective_wire_s"] = col.get("wire_bytes", 0) / hw.line_rate
+        out["collective_reduce_s"] = (
+            col.get("reduce_words", 0) * 4 * 2.0 / hw.pcie_rate)
+        fl = col.get("flushes", 0)
+        out["collective_flushes"] = float(fl)
+        out["collective_overlap_fraction"] = (
+            col.get("overlapped_flushes", 0) / fl if fl else 0.0)
+        exec_time += out["collective_wire_s"] + out["collective_reduce_s"]
+        out["executor_predicted_s"] = exec_time
     # Reliability terms: with the lossy-fabric layer active, every
     # retransmit re-pays the steady-state WQE interval (wasted wire
     # time), RNR backoff idles the engine for modeled µs, and shed
@@ -556,6 +573,83 @@ def simulate_dispatch(n_pkts: int, shares: Sequence[float] = (0.5, 0.5),
     }
 
 
+def simulate_collective(payload: int, n_peers: int, algorithm: str = "ring",
+                        n_buckets: int = 1, pipeline_depth: int = 2,
+                        qp_location: str = "dev_mem",
+                        hw: PaperHW = PAPER_HW) -> Dict[str, float]:
+    """α–β model of a gradient-bucket all-reduce over the flush engine.
+
+    ``payload`` is the full per-peer gradient size in bytes, split evenly
+    over ``n_buckets`` buckets. Each collective round is ONE engine flush
+    (every peer posts its chunk READ deferred, one doorbell serves them
+    all — the dense descriptor mix), so a round costs
+    ``doorbell_flush_time(wqes, chunk)``; reduce rounds additionally pay
+    the host round-trip for the arriving chunk (read + write-back over
+    PCIe). Pipelining overlaps up to ``pipeline_depth`` buckets: their
+    same-numbered rounds share a single flush, amortizing the doorbell
+    startup exactly as ``train.collectives`` does with ``defer=True``.
+
+    Mirrors ``repro.train.collectives.RDMACollective`` round-for-round:
+    ring = (n-1) reduce-scatter + (n-1) all-gather rounds of P/n chunks;
+    recursive doubling = fold + log2(m) XOR + bcast rounds of the full
+    vector (m = largest power of two <= n).
+    """
+    assert n_peers >= 1 and n_buckets >= 1 and pipeline_depth >= 1
+    bkt = payload / n_buckets
+    # per-bucket round structure: (wqes_in_flush, xfer_bytes, reduce_bytes)
+    rounds_: List[Tuple[int, float, float]] = []
+    if n_peers == 1:
+        pass
+    elif algorithm == "ring":
+        chunk = bkt / n_peers
+        rounds_ += [(n_peers, chunk, chunk)] * (n_peers - 1)   # RS
+        rounds_ += [(n_peers, chunk, 0.0)] * (n_peers - 1)     # AG
+    elif algorithm == "rd":
+        m = 1
+        while m * 2 <= n_peers:
+            m *= 2
+        extras = n_peers - m
+        if extras:
+            rounds_.append((extras, bkt, bkt))                 # fold
+        k = m
+        while k > 1:
+            rounds_.append((m, bkt, bkt))                      # XOR
+            k //= 2
+        if extras:
+            rounds_.append((extras, bkt, 0.0))                 # bcast
+    else:
+        raise ValueError(algorithm)
+    n_rounds = len(rounds_)
+    wire_bytes = n_buckets * sum(w * b for w, b, _ in rounds_)
+
+    def _round_time(group: int, wqes: int, xfer: float, red: float):
+        return (doorbell_flush_time(group * wqes, xfer, qp_location, hw)
+                + group * 2.0 * red / hw.pcie_rate)
+
+    serial = n_buckets * sum(_round_time(1, w, b, r) for w, b, r in rounds_)
+    # pipelined: buckets advance in windows of pipeline_depth; each tick
+    # is one flush serving every in-flight bucket's current round
+    pipelined, ticks, overlapped = 0.0, 0, 0
+    done = 0
+    while done < n_buckets:
+        group = min(pipeline_depth, n_buckets - done)
+        for w, b, r in rounds_:
+            pipelined += _round_time(group, w, b, r)
+            ticks += 1
+            overlapped += group > 1
+        done += group
+    return {
+        "algorithm": algorithm,
+        "rounds": n_rounds,
+        "wire_bytes": wire_bytes,
+        "per_peer_wire_bytes": wire_bytes / max(1, n_peers),
+        "serial_us": serial * 1e6,
+        "pipelined_us": pipelined * 1e6,
+        "pipeline_speedup": serial / pipelined if pipelined else 1.0,
+        "overlap_fraction": overlapped / ticks if ticks else 0.0,
+    }
+
+
 def simulate_dma(nbytes: int, direction: str = "read",
                  hw: PaperHW = PAPER_HW) -> float:
     """§VI-B.1: host<->dev_mem DMA throughput over QDMA AXI4-MM (bytes/s)."""
@@ -581,7 +675,7 @@ def run_testcase(path_or_dict) -> Dict:
 
       {"name": str, "op": "read"|"write"|"dma"|"host_access"
                           |"fair_schedule"|"lc_offload"|"streaming_rx"
-                          |"dispatch",
+                          |"dispatch"|"collective",
        "payload": int, "batch": int, "qp_location": "host_mem"|"dev_mem",
        "golden": {"throughput_gbps": float | null,
                   "latency_us": float | null,
@@ -608,6 +702,11 @@ def run_testcase(path_or_dict) -> Dict:
     shares, plus optional ``burst``/``pipeline_depth``/``qp_location``)
     and pin the mixed-ring-vs-split-rings flush and throughput metrics
     of ``simulate_dispatch``.
+
+    ``collective`` testcases carry ``payload``/``n_peers`` (plus optional
+    ``algorithm``/``n_buckets``/``pipeline_depth``/``qp_location``) and
+    pin the ring / recursive-doubling all-reduce wire-bytes and
+    serial-vs-pipelined round metrics of ``simulate_collective``.
     """
     tc = (json.load(open(path_or_dict)) if isinstance(path_or_dict, str)
           else path_or_dict)
@@ -659,6 +758,15 @@ def run_testcase(path_or_dict) -> Dict:
             qp_location=tc.get("qp_location", "dev_mem"))
         out.update(r)
         out["latency_us"] = r["mixed_p99_us"]
+    elif op == "collective":
+        r = simulate_collective(
+            tc["payload"], tc["n_peers"],
+            algorithm=tc.get("algorithm", "ring"),
+            n_buckets=tc.get("n_buckets", 1),
+            pipeline_depth=tc.get("pipeline_depth", 2),
+            qp_location=tc.get("qp_location", "dev_mem"))
+        out.update(r)
+        out["latency_us"] = r["pipelined_us"]
     else:
         raise ValueError(op)
 

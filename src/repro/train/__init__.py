@@ -1,2 +1,4 @@
+from repro.train.collectives import (  # noqa: F401
+    CollectiveError, RDMACollective, ideal_wire_words)
 from repro.train.optimizer import AdamState, adamw_update, init_adam  # noqa: F401
 from repro.train.train_step import make_bucketed_train_step, make_train_step  # noqa: F401

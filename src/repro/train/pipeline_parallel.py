@@ -71,10 +71,27 @@ def pipeline_forward(layer_fn: Callable, mesh: Mesh, stage_axis: str,
                 jnp.zeros((n_microbatches,) + mb_shape, xs.dtype))
         (_, outputs), _ = jax.lax.scan(
             tick, init, jnp.arange(ticks, dtype=jnp.int32))
-        # outputs only valid on the last stage; broadcast them to all
-        # stages via a masked psum so out_specs can be replicated
-        outputs = jnp.where(stage == n_stages - 1, outputs, 0)
-        outputs = jax.lax.psum(outputs, stage_axis)
+        # Outputs are only valid on the last stage. Route them to all
+        # stages with all_to_all + all_gather instead of a masked psum:
+        # each stage keeps exactly the last stage's shard of the
+        # microbatch stack, then the shards are tiled back together —
+        # a dense descriptor mix (every peer pair carries a chunk) that
+        # exercises the engine's coalesced-table path, where the old
+        # psum shipped S-1 all-zero operands per peer just to mask them.
+        if n_stages > 1:
+            pad = (-n_microbatches) % n_stages
+            padded = (jnp.concatenate(
+                [outputs, jnp.zeros((pad,) + mb_shape, xs.dtype)])
+                if pad else outputs)
+            mp = padded.shape[0] // n_stages
+            padded = padded.reshape((n_stages, mp) + mb_shape)
+            routed = jax.lax.all_to_all(
+                padded, stage_axis, split_axis=0, concat_axis=0)
+            # routed[s] is source stage s's shard for this stage; only
+            # the last stage holds real outputs
+            mine = routed[n_stages - 1]
+            gathered = jax.lax.all_gather(mine, stage_axis, tiled=True)
+            outputs = gathered[:n_microbatches]
         return outputs
 
     other_axes = tuple(a for a in mesh.axis_names if a != stage_axis)

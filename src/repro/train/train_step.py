@@ -1,6 +1,6 @@
 """Training step: loss -> grads -> (bucketed) sync -> AdamW/ZeRO-1 update.
 
-Two gradient-synchronization paths, mirroring the paper's two doorbell
+Three gradient-synchronization paths, mirroring the paper's doorbell
 modes (§VI-C):
 
 * ``xla``      — "single-request": plain pjit; XLA inserts one all-reduce
@@ -11,6 +11,14 @@ modes (§VI-C):
                  by the DoorbellCoalescer planner, and each bucket is ONE
                  explicit ``psum`` (or ``psum_scatter`` under ZeRO-1) —
                  n_params collectives become n_buckets.
+* ``bucketed, sync="rdma"`` — the same buckets, but each is a ring
+                 all-reduce of scheduled RDMA verbs on the shared engine
+                 (``repro.train.collectives``): chunk READs through the
+                 pow2 descriptor tables, DRR-fair with serving traffic,
+                 retransmitted byte-identically on a lossy fabric.
+
+Bucket planning bills every leaf at ``dtype.itemsize`` bytes (a bf16
+model fills buckets at its true wire size, not 2x the dispatch count).
 
 Optionally (``compress_grads``) buckets are int8-quantized with error
 feedback before crossing the 'pod' axis — the Streaming Compute block in
@@ -119,9 +127,14 @@ def make_train_step(cfg: ModelConfig, tcfg: TrainConfig,
 # ---------------------------------------------------------------------------
 
 def _bucketize(grads, bucket_bytes: int):
-    """Plan buckets over the flattened grad leaves (backward order)."""
+    """Plan buckets over the flattened grad leaves (backward order).
+
+    Byte accounting derives from each leaf's dtype (``itemsize``) —
+    never a hardcoded ``* 4``: a bf16 leaf bills 2 bytes/element and an
+    int8 residual 1, so buckets fill to the intended wire budget instead
+    of half of it (2x too many dispatches for a bf16 model)."""
     leaves, treedef = jax.tree.flatten(grads)
-    sizes = [int(l.size) * 4 for l in leaves]
+    sizes = [int(l.size) * jnp.dtype(l.dtype).itemsize for l in leaves]
     buckets = plan_buckets(sizes, bucket_bytes)
     return leaves, treedef, buckets
 
@@ -131,11 +144,20 @@ def bucketed_sync(grads, axes: tuple, bucket_bytes: int,
     """Explicit bucketed all-reduce inside shard_map manual axes.
 
     Each bucket: concat leaves -> ONE psum -> split. With ``compress``,
-    cross-'pod' reduction is int8 with error feedback (residuals pytree).
+    cross-'pod' reduction is int8 with error feedback (residuals pytree) —
+    and ``residuals`` is then REQUIRED: a missing error-feedback state
+    raises instead of silently falling back to the uncompressed fp32
+    psum (init with ``streaming.compress.init_error_state``).
     Returns (synced_grads, new_residuals).
     """
     from repro.core.streaming.compress import compressed_all_reduce
 
+    if compress and residuals is None:
+        raise ValueError(
+            "bucketed_sync(compress=True) requires an error-feedback "
+            "residuals pytree (repro.core.streaming.compress."
+            "init_error_state) — refusing to silently ship uncompressed "
+            "fp32 gradients")
     leaves, treedef, buckets = _bucketize(grads, bucket_bytes)
     out = [None] * len(leaves)
     res_leaves = (jax.tree.leaves(residuals) if residuals is not None
@@ -145,7 +167,7 @@ def bucketed_sync(grads, axes: tuple, bucket_bytes: int,
     for b in buckets:
         flat = jnp.concatenate(
             [leaves[i].reshape(-1).astype(jnp.float32) for i in b.leaf_ids])
-        if compress and res_leaves is not None:
+        if compress:
             # intra-pod fp32 psum, cross-pod compressed
             intra = tuple(a for a in axes if a != "pod")
             if intra:
@@ -176,12 +198,30 @@ def bucketed_sync(grads, axes: tuple, bucket_bytes: int,
     return synced, residuals_out
 
 
-def make_bucketed_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh):
+def make_bucketed_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                             sync: str = "psum", engine=None,
+                             n_peers: Optional[int] = None):
     """shard_map path: manual over DP axes, auto over 'model'.
 
     The returned step has signature (params, opt, batch, residuals) ->
     (loss, params, opt, residuals). Dispatch count = number of buckets.
+
+    ``sync`` picks how a bucket crosses the data-parallel boundary:
+
+    * ``"psum"`` — one explicit ``jax.lax.psum`` per bucket (the XLA
+      collective; the PR-1..7 behavior).
+    * ``"rdma"`` — buckets become scheduled RDMA verbs on a shared
+      :class:`~repro.core.rdma.engine.RDMAEngine` (ring all-reduce over
+      per-peer QPs through the descriptor transport, reliability layer,
+      and DRR scheduler — see ``repro.train.collectives``). ``engine``
+      supplies the engine (one is created lazily otherwise) and
+      ``n_peers`` the data-parallel degree (defaults to the mesh's DP
+      size; no mesh needed when given explicitly).
     """
+    if sync not in ("psum", "rdma"):
+        raise ValueError(f"sync must be psum|rdma, got {sync!r}")
+    if sync == "rdma":
+        return _make_rdma_bucketed_step(cfg, tcfg, mesh, engine, n_peers)
     dp_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
     dp_size = 1
     for a in dp_axes:
@@ -227,4 +267,116 @@ def make_bucketed_train_step(cfg: ModelConfig, tcfg: TrainConfig, mesh):
             check_vma=False,
         )(params, opt_state, batch, residuals)
 
+    return step
+
+
+# ---------------------------------------------------------------------------
+# Path 3: bucketed sync as scheduled RDMA verbs (training joins the engine)
+# ---------------------------------------------------------------------------
+
+def _make_rdma_bucketed_step(cfg: ModelConfig, tcfg: TrainConfig, mesh,
+                             engine, n_peers: Optional[int]):
+    """Bucketed step whose gradient sync is a ring all-reduce of RDMA
+    verbs on the shared engine (``repro.train.collectives``) instead of
+    ``psum``. Structure:
+
+      1. one jitted grads_fn: ``vmap`` over the peer-split batch yields
+         every peer's local mean gradients (no collective in the HLO),
+      2. buckets planned by ``_bucketize`` (dtype-billed bytes), each
+         bucket's per-peer shards summed by ``RDMACollective`` —
+         ``pipeline_depth`` buckets in flight so bucket i's wire phase
+         overlaps bucket i+1's (the backward-order overlap),
+      3. one jitted update_fn applies clip + AdamW to the synced mean.
+
+    Both jitted programs see fixed shapes, and the collective's chunk
+    transfers ride pow2 shape buckets — so steps after the first
+    compile NOTHING (XLA or descriptor/QDMA programs), lossy fabric
+    included. ``compress_grads`` is a psum-path feature (int8 crosses
+    the 'pod' axis there); combining it with ``sync='rdma'`` raises.
+    """
+    import numpy as np
+
+    if tcfg.compress_grads:
+        raise ValueError(
+            "compress_grads is the psum path's cross-pod compression; "
+            "sync='rdma' moves f32 pool words — combine is not supported")
+    if n_peers is None:
+        if mesh is None:
+            raise ValueError("sync='rdma' needs n_peers or a mesh")
+        n_peers = 1
+        for a in ("pod", "data"):
+            if a in mesh.axis_names:
+                n_peers *= mesh.shape[a]
+    n = int(n_peers)
+    bucket_bytes = int(tcfg.grad_bucket_mb * (1 << 20)) or (16 << 20)
+
+    def _grads(params, batch):
+        def one(mb):
+            return _microbatch_grads(params, cfg, mb, tcfg)
+
+        def split(x):
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        return jax.vmap(one)(jax.tree.map(split, batch))
+
+    grads_fn = jax.jit(_grads)
+
+    @jax.jit
+    def update_fn(loss_p, grads, params, opt_state):
+        loss = jnp.mean(loss_p)
+        grads, _ = clip_by_global_norm(grads, tcfg.grad_clip)
+        new_params, new_opt = adamw_update(grads, opt_state, params, tcfg)
+        return loss, new_params, new_opt
+
+    state = {"coll": None}
+
+    def _collective(max_bucket_words):
+        coll = state["coll"]
+        if coll is None:
+            from repro.core.rdma.engine import RDMAEngine
+            from repro.train.collectives import RDMACollective
+            eng = engine
+            depth = 2
+            if eng is None:
+                # per-peer arena: (data + scratch) per in-flight bucket
+                need = 2 * max_bucket_words * depth + 1024
+                size = 1 << max(12, (need - 1).bit_length())
+                eng = RDMAEngine(n_peers=max(n, 2), pool_size=size,
+                                 scheduler="drr")
+            coll = state["coll"] = RDMACollective(
+                eng, n, algorithm="ring", pipeline_depth=depth)
+        return coll
+
+    def step(params, opt_state, batch, residuals=None):
+        loss_p, grads_p = grads_fn(params, batch)
+        leaves, treedef = jax.tree.flatten(grads_p)   # each (n, ...)
+        sizes = [int(l[0].size) * jnp.dtype(l.dtype).itemsize
+                 for l in leaves]
+        buckets = plan_buckets(sizes, bucket_bytes)
+        np_leaves = [np.asarray(l, np.float32) for l in leaves]
+        # arena words per bucket = element count padded to n chunks
+        # (billing bytes are dtype-derived; the wire moves f32 words)
+        coll = _collective(max(
+            -(-sum(np_leaves[i][0].size for i in b.leaf_ids) // n) * n
+            for b in buckets))
+        bucket_shards = [
+            [np.concatenate([np_leaves[i][p].ravel() for i in b.leaf_ids])
+             for p in range(n)]
+            for b in buckets]
+        reduced = coll.all_reduce_buckets(bucket_shards)
+        out = [None] * len(leaves)
+        for b, red in zip(buckets, reduced):
+            flat = red[0] / n                         # sum -> mean
+            offset = 0
+            for i in b.leaf_ids:
+                sz = np_leaves[i][0].size
+                out[i] = jnp.asarray(
+                    flat[offset:offset + sz].reshape(leaves[i].shape[1:]))
+                offset += sz
+        grads = treedef.unflatten(out)
+        loss, new_params, new_opt = update_fn(loss_p, grads, params,
+                                              opt_state)
+        return loss, new_params, new_opt, residuals
+
+    step.collective = _collective      # test/bench introspection hook
     return step

@@ -93,7 +93,7 @@ class TestInjectedRegression:
         assert names == {"BENCH_transport.json", "BENCH_fairness.json",
                          "BENCH_lc_offload.json", "BENCH_streaming.json",
                          "BENCH_dispatch.json", "BENCH_reliability.json",
-                         "BENCH_kv_serve.json"}
+                         "BENCH_kv_serve.json", "BENCH_collectives.json"}
         for g in ci_gate.GATES:
             compile_rules = [r for r in g.rules if "compile" in r.key]
             assert compile_rules, f"{g.name} gates no compile counts"
@@ -204,6 +204,46 @@ class TestInjectedRegression:
                 ("migration.no_pages_lost", False),
                 ("migration.ledger_conserved", False),
                 ("migration.error_path.src_intact", False)):
+            rec = json.loads(json.dumps(base))
+            node = rec
+            *parents, leaf = key.split(".")
+            for p in parents:
+                node = node[p]
+            node[leaf] = bad
+            msgs = check_gate(g, rec, base)
+            assert len(msgs) == 1 and key in msgs[0], (key, msgs)
+
+    def test_collectives_gate_pins_training_keys(self):
+        """The collectives gate's schema: zero-tolerance steady-state
+        compile counts, the exact ring wire-words ratio vs the α–β
+        ideal, both algorithms' oracle parity, a real overlap fraction,
+        the serving-tenant Jain floor, and chaos parity — injecting a
+        regression into each key fails on exactly that key."""
+        g = next(g for g in ci_gate.GATES if g.name == "collectives")
+        keys = {r.key for r in g.rules}
+        assert {"warm_descriptor_compiles", "warm_qdma_compiles",
+                "ring.wire_ratio", "ring.parity", "rd.parity",
+                "overlap.overlap_fraction", "fairness.serving_jain",
+                "chaos.parity_10pct_drop"} <= keys
+        for key in ("warm_descriptor_compiles", "warm_qdma_compiles"):
+            rule = next(r for r in g.rules if r.key == key)
+            assert rule.direction == "<=" and rule.tolerance == 0.0
+        base = {"warm_descriptor_compiles": 0, "warm_qdma_compiles": 0,
+                "ring": {"wire_ratio": 1.0, "parity": True},
+                "rd": {"parity": True},
+                "overlap": {"overlap_fraction": 1.0},
+                "fairness": {"serving_jain": 1.0},
+                "chaos": {"parity_10pct_drop": True}}
+        assert check_gate(g, json.loads(json.dumps(base)), base) == []
+        for key, bad in (
+                ("warm_descriptor_compiles", 1),
+                ("warm_qdma_compiles", 3),
+                ("ring.wire_ratio", 1.5),
+                ("ring.parity", False),
+                ("rd.parity", False),
+                ("overlap.overlap_fraction", 0.0),
+                ("fairness.serving_jain", 0.66),
+                ("chaos.parity_10pct_drop", False)):
             rec = json.loads(json.dumps(base))
             node = rec
             *parents, leaf = key.split(".")
