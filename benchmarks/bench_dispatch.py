@@ -63,13 +63,13 @@ def _mixed_headers(n, seed=0):
 
 
 def _table():
-    from repro.core.streaming import ACTION_DROP, ACTION_RDMA, MatchTable
+    from repro.core.streaming import Drop, Forward, Handler, MatchTable
     from repro.kernels.lc_offload import (STREAM_PARSER_WORKLOAD,
                                           STREAM_QUANT_WORKLOAD)
-    return (MatchTable(default=ACTION_DROP)
-            .add(ACTION_RDMA, priority=10, is_rdma=1)
-            .add(STREAM_PARSER_WORKLOAD, udp_dport=CTRL_PORT)
-            .add(STREAM_QUANT_WORKLOAD, udp_dport=BULK_PORT))
+    return (MatchTable(default=Drop())
+            .add(Forward(), priority=10, is_rdma=1)
+            .add(Handler(STREAM_PARSER_WORKLOAD), udp_dport=CTRL_PORT)
+            .add(Handler(STREAM_QUANT_WORKLOAD), udp_dport=BULK_PORT))
 
 
 def _mixed_setup():
@@ -243,7 +243,7 @@ def run_pr4_parity(hdrs):
     """Flush-count parity: the SAME single-class (ctrl) stream through
     (a) the classic attach_ring + stream() path and (b) an explicit
     one-entry StreamDispatcher — identical machines, identical flushes."""
-    from repro.core.streaming import MatchTable, StreamDispatcher
+    from repro.core.streaming import Handler, MatchTable, StreamDispatcher
     from repro.kernels.lc_offload import STREAM_PARSER_WORKLOAD
 
     ctrl = np.stack([h for h in hdrs
@@ -265,7 +265,7 @@ def run_pr4_parity(hdrs):
 
     def via_dispatcher(eng, ring, k):
         disp = StreamDispatcher(k.block, ring,
-                                MatchTable(default=k.workload_id),
+                                MatchTable(default=Handler(k.workload_id)),
                                 burst=BURST)
         disp.register_handler(k.workload_id, *k.stream_out)
         return disp.service()

@@ -183,7 +183,7 @@ def main():
     # gathers all ride ONE descriptor table per flush. Both handlers
     # write class-mirrored output rings; host verbs traffic can share
     # the very same flushes (the engine stays one shared machine).
-    from repro.core.streaming import (ACTION_DROP, ACTION_RDMA, MatchTable,
+    from repro.core.streaming import (Drop, Forward, Handler, MatchTable,
                                       StreamDispatcher)
     from repro.kernels.lc_offload import (QUANT_ROW, STREAM_QUANT_WORKLOAD)
 
@@ -192,10 +192,10 @@ def main():
     dring = RXRing(eng, peer=client, base=6144, depth=16)
     dmeta_mr = eng.register_mr(server, 3328, 16 * 4)
     dquant_mr = eng.register_mr(server, 3392, 16 * QUANT_ROW)
-    table = (MatchTable(default=ACTION_DROP)
-             .add(ACTION_RDMA, priority=10, is_rdma=1)
-             .add(STREAM_PARSER_WORKLOAD, udp_dport=9000)
-             .add(STREAM_QUANT_WORKLOAD, udp_dport=9100))
+    table = (MatchTable(default=Drop())
+             .add(Forward(), priority=10, is_rdma=1)
+             .add(Handler(STREAM_PARSER_WORKLOAD), udp_dport=9000)
+             .add(Handler(STREAM_QUANT_WORKLOAD), udp_dport=9100))
     disp = StreamDispatcher(sblk, dring, table, burst=4)
     disp.register_handler(STREAM_PARSER_WORKLOAD, server, dmeta_mr.rkey,
                           3328)
@@ -229,6 +229,49 @@ def main():
           f"{len(eng.poll_cq(host_qp, 64))}")
     assert dconsumed == dcounts["streamed"] == 8
     assert dp["dispatch_mixed_rounds"] - m0 >= 1
+
+    # -- SERVICE CHAIN: a MatchTable action that is a kernel PIPELINE ------
+    # The dispatch plane generalized (BALBOA-style service chaining): a
+    # table entry can name a Chain of lookaside kernels, where stage N's
+    # RDMA write-back region IS stage N+1's operand-fetch source — no
+    # host hop between stages, every stage's gathers and write-backs
+    # riding the engine's shared shape-bucketed descriptor tables. The
+    # production pipeline below is gradient egress: rows stream through
+    # compress→checksum (int8 wire bytes byte-identical to
+    # kops.compress(chunk=64), integrity stamps computed FROM those wire
+    # bytes by the next stage), while host verbs traffic armed on the
+    # same engine shares the very same flushes.
+    from repro.core.streaming import GradEgressChain
+    from repro.kernels import ops as kops
+
+    geng = RDMAEngine(n_peers=2, pool_size=1 << 15, scheduler="drr",
+                      flush_budget=16)
+    chain = GradEgressChain(geng, data_peer=server, ring_base=1024,
+                            out_base=4096, lc_peer=client,
+                            scratch_base=1 << 14, scratch_size=1 << 14,
+                            depth=16, burst=8)
+    cqp = geng.create_qp(client, server)
+    cmr = geng.register_mr(server, 0, 512)
+    for i in range(4):                  # host verbs armed alongside
+        geng.post_send(cqp, WQE(Opcode.READ, cqp.qp_num, 800 + i,
+                                local_addr=700 + i, remote_addr=i,
+                                length=1, rkey=cmr.rkey))
+    geng.ring_sq_doorbell(cqp, defer=True)
+    gflat = np.random.default_rng(3).normal(size=500).astype(np.float32)
+    q, s, csum, resid = chain.compress(gflat, np.zeros(500, np.float32))
+    kq, ks, _ = kops.compress(jnp.asarray(gflat), chunk=64)
+    cparity = (np.array_equal(q, np.asarray(kq))
+               and np.array_equal(s, np.asarray(ks)))
+    cled = geng.stats["dispatch"]["chains"]["grad_egress"]
+    print(f"CHAIN : compress→checksum egress of {q.shape[0]} rows in "
+          f"{cled['bursts']} burst(s): {cled['stage_invocations']} stage "
+          f"invocations / {cled['wqes']} chain WQEs, wire parity vs "
+          f"kops.compress={cparity}, checksums "
+          f"ok={GradEgressChain.verify_checksums(q, s, csum)}, host CQEs "
+          f"alongside: {len(geng.poll_cq(cqp, 64))}")
+    assert cparity and cled["stages"] == 2
+    assert cled["completed_pkts"] == q.shape[0]
+    assert GradEgressChain.verify_checksums(q, s, csum)
 
     # -- RELIABILITY: a lossy wire behind the same verbs (paper §III-A) ----
     # RoCEv2 RC semantics: every WQE transmission gets a PSN, a seeded

@@ -31,6 +31,7 @@ Exit status 1 lists every regressed key with its rule.
 from __future__ import annotations
 
 import argparse
+import gc
 import json
 import os
 import shutil
@@ -166,6 +167,11 @@ def _run_collectives(out_json: str, smoke: bool = True) -> dict:
                                  out_json=out_json)
 
 
+def _run_chains(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_chains
+    return bench_chains.run(verbose=True, smoke=smoke, out_json=out_json)
+
+
 GATES: Tuple[Gate, ...] = (
     Gate("transport", "BENCH_transport.json", "BENCH_transport.ci.json",
          rules=(
@@ -287,6 +293,33 @@ GATES: Tuple[Gate, ...] = (
              Rule("chaos.parity_10pct_drop", "=="),
          ),
          runner=_run_collectives),
+    Gate("chains", "BENCH_chains.json", "BENCH_chains.ci.json",
+         rules=(
+             # steady-state chain streaming rides warmed descriptor/QDMA
+             # shape buckets — zero new compiles, exactly
+             Rule("warm_descriptor_compiles", "<="),
+             Rule("warm_qdma_compiles", "<="),
+             # every stage's rows byte-identical to the composed
+             # direct-invoke oracles; the egress compress→checksum
+             # production chain matches kops.compress with verifiable
+             # checksum stamps
+             Rule("stage_parity", "=="),
+             Rule("egress_parity", "=="),
+             Rule("checksums_ok", "=="),
+             # stage N+1 fetches must keep riding the grouped pass's
+             # shared flushes (fewer flushes than a serial drain), and
+             # every packet entering a chain must leave it
+             Rule("flush_ratio_staged_over_chained", ">=", 0.05),
+             Rule("chain_completion", "==", 0.0),
+             # 10% seeded drop: retransmitted stage hops stay byte-exact
+             # and the retransmit path compiles nothing new
+             Rule("chaos.parity_10pct_drop", "=="),
+             Rule("chaos.warm_descriptor_compiles", "<="),
+             # the cost model keeps predicting a chained win
+             Rule("model.flush_ratio", ">=", 0.05),
+             Rule("model.chained_speedup_vs_staged", ">=", 0.05),
+         ),
+         runner=_run_chains),
 )
 
 
@@ -300,6 +333,10 @@ def run_gates(gates=GATES, artifact_dir: str = ARTIFACT_DIR,
         mode = "full" if update_baselines else "smoke"
         print(f"== {gate.name} ({mode}) ==", flush=True)
         artifact = os.path.join(artifact_dir, gate.artifact)
+        # drain the gen-2 garbage the previous gates accrued NOW: on a
+        # 1-CPU runner a full collection landing inside a bench's
+        # measured phase reads as a wall-clock regression
+        gc.collect()
         record = gate.runner(artifact, smoke=not update_baselines)
         base_path = os.path.join(REPO, gate.baseline)
         if update_baselines:

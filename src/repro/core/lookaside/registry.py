@@ -54,7 +54,12 @@ StatusMsg fires. A multi-entry table routes the same ring's slots to
 DIFFERENT handler kernels by parsed class; ``service_group`` then admits
 one invocation per handler before each shared flush, so every handler's
 operand-fetch gather for a service round lands in the same descriptor
-table.
+table. Service CHAINS generalize this to inter-kernel dataflow
+(``service_group(..., keep_idle=True)``): a table action may name an
+ordered pipeline of kernels whose stage *i* write-back region is stage
+*i+1*'s operand-fetch source — the downstream ControlMsg is enqueued by
+the upstream finalize hook mid-pass, admitted in a later round, its
+fetch riding a later shared flush of the same pass.
 """
 from __future__ import annotations
 
@@ -91,6 +96,10 @@ class LCKernel:
         self.ring_burst = 32
         self.stream_out = None               # (out_peer, out_rkey, out_base)
         self.dispatcher = None               # one-entry plane (attach_ring)
+        # chain-capable kernels declare their row geometry here (a
+        # ``ChainStageSpec``); ``StreamDispatcher.register_chain``
+        # validates stage composition against it
+        self.stage_spec = None
 
     def stream(self, max_bursts: Optional[int] = None) -> int:
         """Drain this kernel's attached RX ring (see
@@ -285,14 +294,15 @@ class LookasideBlock:
         Internally this is the one-entry degenerate case of the dispatch
         plane: a ``StreamDispatcher`` over a ``MatchTable`` whose default
         action is this kernel, so the whole ring belongs to it."""
-        from repro.core.streaming.dispatch import (MatchTable,
+        from repro.core.streaming.dispatch import (Handler, MatchTable,
                                                    StreamDispatcher)
         k = self.kernels[workload_id]
         k.ring = ring
         k.ring_burst = max(1, int(burst))
         k.stream_out = (out_peer, out_rkey, out_base)
         k.dispatcher = StreamDispatcher(
-            self, ring, MatchTable(default=workload_id), burst=burst)
+            self, ring, MatchTable(default=Handler(workload_id)),
+            burst=burst)
         k.dispatcher.register_handler(workload_id, out_peer, out_rkey,
                                       out_base)
         return k
@@ -354,7 +364,8 @@ class LookasideBlock:
         k.dispatcher.burst = k.ring_burst
         return k.dispatcher.service(max_bursts=max_bursts)
 
-    def service_group(self, workload_ids: Sequence[int]) -> None:
+    def service_group(self, workload_ids: Sequence[int],
+                      keep_idle: bool = False) -> None:
         """Service several kernels' control FIFOs as ONE dispatch round
         stream: with more than one backlogged kernel, admissions
         round-robin across them so every kernel's operand-fetch WQEs are
@@ -362,12 +373,24 @@ class LookasideBlock:
         one-descriptor-table-per-service-round contract. A single
         backlogged kernel takes the plain ``_service`` path (serial or
         pipelined by ``pipeline_depth``), byte- and flush-identical to
-        the pre-dispatch behavior."""
+        the pre-dispatch behavior.
+
+        ``keep_idle=True`` is the multi-kernel DATAFLOW admission mode
+        (service chains): listed kernels whose control FIFO is currently
+        empty stay in the grouped pass anyway, because a downstream
+        stage's ControlMsg is enqueued mid-pass by its upstream stage's
+        finalize hook — the grouped loop re-checks every listed FIFO per
+        round, so the late message is admitted into a later round of the
+        SAME pass and its fetch rides a later shared flush."""
         kernels = [self.kernels[w] for w in workload_ids]
-        kernels = [k for k in kernels if k.control_fifo.not_empty]
-        if len(kernels) == 1:
-            self._service(kernels[0])
-        elif kernels:
+        if not keep_idle:
+            kernels = [k for k in kernels if k.control_fifo.not_empty]
+            if len(kernels) == 1:
+                self._service(kernels[0])
+            elif kernels:
+                self._service_grouped(kernels)
+            return
+        if any(k.control_fifo.not_empty for k in kernels):
             self._service_grouped(kernels)
 
     def _service(self, k: LCKernel) -> None:

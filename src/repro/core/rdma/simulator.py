@@ -192,6 +192,24 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
         out["dispatch_classes"] = float(len(dp.get("classes", {})))
         for name, ledger in dp.get("classes", {}).items():
             out[f"dispatch_pkts_{name}"] = float(ledger.get("pkts", 0))
+    # Service-chain terms: per-chain pipeline ledgers — dataflow_msgs are
+    # the inter-stage invocations the finalize hooks enqueued mid-pass
+    # (each one a fetch that rode a later SHARED flush instead of its own
+    # drain), completion the share of claimed packets whose final stage
+    # write-back landed.
+    chains = dp.get("chains") or {}
+    if chains:
+        out["dispatch_chains"] = float(len(chains))
+        for name, led in chains.items():
+            pkts = led.get("pkts", 0)
+            out[f"chain_pkts_{name}"] = float(pkts)
+            out[f"chain_stages_{name}"] = float(led.get("stages", 0))
+            out[f"chain_stage_invocations_{name}"] = float(
+                led.get("stage_invocations", 0))
+            out[f"chain_dataflow_msgs_{name}"] = float(
+                led.get("dataflow_msgs", 0))
+            out[f"chain_completion_{name}"] = (
+                led.get("completed_pkts", 0) / pkts if pkts else 0.0)
     # Disaggregated KV serving terms (serve.kv_cache): fetch outcome
     # rates and the migration ledger — a rolled-back page is wire time
     # spent without eviction progress.
@@ -573,6 +591,88 @@ def simulate_dispatch(n_pkts: int, shares: Sequence[float] = (0.5, 0.5),
     }
 
 
+def simulate_chain(n_pkts: int, rows: Sequence[int] = (64, 65, 2),
+                   burst: int = 32, pipeline_depth: int = 4,
+                   qp_location: str = "dev_mem", hw: PaperHW = PAPER_HW,
+                   srx: StreamingRX = STREAMING_RX) -> Dict[str, float]:
+    """Model a service CHAIN (BALBOA-style kernel pipeline) on the
+    dispatch plane vs the staged-serial alternative.
+
+    ``rows`` gives the row geometry at each stage boundary in words:
+    ``rows[s]`` is stage *s*'s input row width, ``rows[s + 1]`` its
+    output row width — so ``len(rows) - 1`` stages. CHAINED: stage *s*'s
+    write-back region is stage *s+1*'s fetch source, every stage's
+    gathers riding the shared descriptor tables of ONE grouped service
+    pass — B = ceil(n/burst) stage-0 bursts and S stages pipeline
+    systolically through roughly ``B + 2S`` flushes (burst *b*'s stage
+    *s+1* fetch shares a flush with burst *b+1*'s stage *s* work).
+    STAGED-SERIAL: each stage is its own single-class drain — every
+    stage pays its own per-burst fetch flushes and trailing write-back,
+    ``S * (B + 1)`` flushes and no cross-stage overlap.
+
+    The flush counts are the deterministic quantities ``bench_chains``
+    pins; the throughput/latency numbers thread the paper-hardware cost
+    model (wire serialization per row word, per-row stage compute from
+    the streaming-RX profile)."""
+    if n_pkts <= 0 or burst <= 0 or len(rows) < 2:
+        raise ValueError((n_pkts, burst, rows))
+    n_stages = len(rows) - 1
+    n_bursts = -(-n_pkts // burst)
+    bursts = [min(burst, n_pkts - j * burst) for j in range(n_bursts)]
+    o = _request_overheads(hw, qp_location)
+
+    def cell(s: int, b: int) -> Tuple[float, float]:
+        """(move, compute) seconds of stage ``s`` on a ``b``-row burst."""
+        move = (o["fetch_next"] + b * rows[s] * 4 / hw.line_rate
+                + o["fetch_next"] + b * rows[s + 1] * 4 / hw.line_rate)
+        compute = b * srx.parse_per_pkt_s + srx.status_fifo_s
+        return move, compute
+
+    chained_flushes = n_bursts + 2 * n_stages
+    staged_flushes = n_stages * (n_bursts + 1)
+
+    # chained: systolic ticks — at tick t, stage s works burst t - s, all
+    # active cells sharing the tick's flush (pipeline_depth >= 2 overlaps
+    # them; a depth-1 block serializes every cell)
+    if pipeline_depth >= 2:
+        chained_total = o["fetch_first"]
+        for t in range(n_bursts + n_stages - 1):
+            active = [sum(cell(s, bursts[t - s])) for s in range(n_stages)
+                      if 0 <= t - s < n_bursts]
+            chained_total += max(active)
+    else:
+        chained_total = o["fetch_first"] + sum(
+            sum(cell(s, b)) for s in range(n_stages) for b in bursts)
+
+    # staged-serial: per-stage independent drains (the single-class
+    # shape of ``simulate_dispatch``), summed — no cross-stage overlap
+    staged_total = 0.0
+    for s in range(n_stages):
+        costs = [(o["fetch_first"] + cell(s, b)[0], cell(s, b)[1])
+                 for b in bursts]
+        if pipeline_depth >= 2:
+            t = costs[0][0]
+            for (m, _), (_, cp_prev) in zip(costs[1:], costs):
+                t += max(m, cp_prev)
+            t += costs[-1][1]
+        else:
+            t = sum(m + cp for m, cp in costs)
+        staged_total += t
+
+    return {
+        "stages": float(n_stages),
+        "bursts": float(n_bursts),
+        "chained_flushes": float(chained_flushes),
+        "staged_flushes": float(staged_flushes),
+        "flush_ratio": staged_flushes / chained_flushes,
+        "chained_pkts_per_s": n_pkts / chained_total,
+        "staged_pkts_per_s": n_pkts / staged_total,
+        "chained_speedup_vs_staged": staged_total / chained_total,
+        "chained_p99_us": chained_total * 1e6,
+        "staged_p99_us": staged_total * 1e6,
+    }
+
+
 def simulate_collective(payload: int, n_peers: int, algorithm: str = "ring",
                         n_buckets: int = 1, pipeline_depth: int = 2,
                         qp_location: str = "dev_mem",
@@ -675,7 +775,7 @@ def run_testcase(path_or_dict) -> Dict:
 
       {"name": str, "op": "read"|"write"|"dma"|"host_access"
                           |"fair_schedule"|"lc_offload"|"streaming_rx"
-                          |"dispatch"|"collective",
+                          |"dispatch"|"chain"|"collective",
        "payload": int, "batch": int, "qp_location": "host_mem"|"dev_mem",
        "golden": {"throughput_gbps": float | null,
                   "latency_us": float | null,
@@ -702,6 +802,11 @@ def run_testcase(path_or_dict) -> Dict:
     shares, plus optional ``burst``/``pipeline_depth``/``qp_location``)
     and pin the mixed-ring-vs-split-rings flush and throughput metrics
     of ``simulate_dispatch``.
+
+    ``chain`` testcases carry ``n_pkts``/``rows`` (row words at each
+    stage boundary, plus optional ``burst``/``pipeline_depth``/
+    ``qp_location``) and pin the chained-vs-staged-serial flush and
+    throughput metrics of ``simulate_chain``.
 
     ``collective`` testcases carry ``payload``/``n_peers`` (plus optional
     ``algorithm``/``n_buckets``/``pipeline_depth``/``qp_location``) and
@@ -758,6 +863,14 @@ def run_testcase(path_or_dict) -> Dict:
             qp_location=tc.get("qp_location", "dev_mem"))
         out.update(r)
         out["latency_us"] = r["mixed_p99_us"]
+    elif op == "chain":
+        r = simulate_chain(
+            tc["n_pkts"], rows=tc.get("rows", (64, 65, 2)),
+            burst=tc.get("burst", 32),
+            pipeline_depth=tc.get("pipeline_depth", 4),
+            qp_location=tc.get("qp_location", "dev_mem"))
+        out.update(r)
+        out["latency_us"] = r["chained_p99_us"]
     elif op == "collective":
         r = simulate_collective(
             tc["payload"], tc["n_peers"],

@@ -177,26 +177,10 @@ _qp_counter = itertools.count(1)
 #: The first rkey an engine-local allocator hands out (RDMAEngine owns a
 #: per-engine ``itertools.count(RKEY_BASE)`` so rkeys are deterministic
 #: per engine and never leak across engines or test execution order).
+#: The module-global ``next_rkey()`` shim this replaced (deprecated in
+#: PR 5) is gone: rkeys come only from ``RDMAEngine.register_mr``.
 RKEY_BASE = 0x1000
-
-# The deprecated module-global counter starts in a disjoint range so a
-# shim-minted rkey can never collide with any engine's allocation.
-_rkey_counter = itertools.count(RKEY_BASE | 0x8000_0000)
 
 
 def next_qp_num() -> int:
     return next(_qp_counter)
-
-
-def next_rkey() -> int:
-    """DEPRECATED module-global rkey allocator. Kept only as a shim for
-    out-of-tree callers: it made rkeys depend on process-wide
-    ``register_mr`` history (test execution order) and leak across
-    engines. ``RDMAEngine`` now allocates from its own per-engine
-    counter — use ``engine.register_mr``. Shim rkeys live in a high
-    disjoint range, so they cannot alias engine-minted ones."""
-    import warnings
-    warnings.warn("verbs.next_rkey() is deprecated: rkeys are allocated "
-                  "per engine by RDMAEngine.register_mr",
-                  DeprecationWarning, stacklevel=2)
-    return next(_rkey_counter)

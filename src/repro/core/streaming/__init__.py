@@ -1,14 +1,15 @@
 from repro.core.streaming.classifier import (  # noqa: F401
     TrafficClass, TrafficRouter, TransferDesc, classify_headers,
-    make_roce_header,
+    default_ingress_table, make_roce_header,
 )
 from repro.core.streaming.compress import (  # noqa: F401
-    compress_bucket, compressed_all_reduce, decompress_bucket,
-    init_error_state,
+    GradEgressChain, compress_bucket, compressed_all_reduce,
+    decompress_bucket, init_error_state,
 )
 from repro.core.streaming.dispatch import (  # noqa: F401
-    ACTION_DROP, ACTION_RDMA, ACTION_STREAM, MatchEntry, MatchTable,
-    StreamDispatcher,
+    ACTION_DROP, ACTION_RDMA, ACTION_STREAM, Action, Chain, Drop,
+    Forward, Handler, MatchEntry, MatchTable, Stream, StreamDispatcher,
+    as_action,
 )
 from repro.core.streaming.rx_ring import (  # noqa: F401
     RXRing, percentile_us, record_latency_us,

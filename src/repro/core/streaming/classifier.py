@@ -15,10 +15,11 @@ Two levels, mirroring the paper:
 
 The packet-level RDMA-vs-ring split is no longer hardwired: the router
 consults a ``MatchTable`` whose DEFAULT instance is exactly the old
-behavior expressed as two table rows — ``is_rdma == 1 → ACTION_RDMA``
-plus a catch-all ``ACTION_STREAM`` default — and a custom table routes
-each ingress packet to a per-class handler kernel instead (the packet
-lands in the RX ring tagged with its handler id, and the egress
+behavior expressed as two table rows — ``is_rdma == 1 → Forward()``
+plus a catch-all ``Stream()`` default — and a custom table routes each
+ingress packet to a per-class ``Handler`` kernel or a ``Chain``
+pipeline instead (the packet lands in the RX ring tagged with the
+handler's workload id or the chain's tag, and the egress
 ``StreamDispatcher`` demuxes).
 """
 from __future__ import annotations
@@ -30,8 +31,8 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
-from repro.core.streaming.dispatch import (ACTION_DROP, ACTION_RDMA,
-                                           ACTION_STREAM, MatchTable)
+from repro.core.streaming.dispatch import (Chain, Drop, Forward, Handler,
+                                           MatchTable, Stream)
 from repro.kernels import ops as kops
 
 
@@ -62,7 +63,7 @@ class TransferDesc:
 #: to the engine, everything else streamed untagged (the attached
 #: dispatcher's default handler claims it).
 def default_ingress_table() -> MatchTable:
-    return MatchTable(default=ACTION_STREAM).add(ACTION_RDMA, is_rdma=1)
+    return MatchTable(default=Stream()).add(Forward(), is_rdma=1)
 
 
 class TrafficRouter:
@@ -71,11 +72,13 @@ class TrafficRouter:
 
     With an ``rx_ring`` attached it is also the §IV-D MAC ingress:
     ``ingest_packets`` parses raw headers byte-level and consults the
-    match→action ``table`` per packet — ``ACTION_RDMA`` rows count
-    toward the RDMA engine, ``ACTION_DROP`` rows are discarded, handler
-    rows land in the RX ring tagged with the handler's workload id (the
-    egress ``StreamDispatcher`` demuxes the ring by that tag). No table
-    given → ``default_ingress_table()``, the seed RDMA-vs-ring split.
+    match→action ``table`` per packet — ``Forward()`` rows count toward
+    the RDMA engine, ``Drop()`` rows are discarded, ``Handler`` rows
+    land in the RX ring tagged with the handler's workload id and
+    ``Chain`` rows tagged with the chain's deterministic tag (the
+    egress ``StreamDispatcher`` demuxes the ring by those tags). No
+    table given → ``default_ingress_table()``, the seed RDMA-vs-ring
+    split.
 
     ``shedder`` (a reliability ``LoadShedder``) arms graceful
     degradation: while the engine's un-ACKed retransmit window exceeds
@@ -94,12 +97,12 @@ class TrafficRouter:
             tc: {"bytes": 0, "count": 0} for tc in TrafficClass}
         self.pkt_counters = {"rdma": 0, "streamed": 0, "dropped": 0,
                              "backpressure": 0, "shed": 0}
-        # per-action ingress ledger ("rdma"/"drop"/"stream"/handler id):
-        # finer-grained than the 4-key pkt_counters outcome view. On a
-        # table without ACTION_DROP rows, pkt_counters' drop/
-        # backpressure entries equal the ring's rx_ring_* refusal
+        # per-action ingress ledger, keyed by the (hashable, frozen)
+        # Action object: finer-grained than the 4-key pkt_counters
+        # outcome view. On a table without Drop() rows, pkt_counters'
+        # drop/backpressure entries equal the ring's rx_ring_* refusal
         # counters; table-level drops also land in pkt_counters
-        # ["dropped"] (split out here under "drop") without touching
+        # ["dropped"] (split out here under Drop()) without touching
         # the ring.
         self.class_counters: Dict[object, int] = {}
 
@@ -110,8 +113,8 @@ class TrafficRouter:
         policy — ``dropped`` (lost) vs ``backpressure`` (retryable after
         a drain) — so router and ring/transport telemetry agree. With no
         ring attached the streamed share is dropped. Table-level
-        ``ACTION_DROP`` packets also count as ``dropped`` (see
-        ``class_counters["drop"]`` for the split). Returns this call's
+        ``Drop()`` packets also count as ``dropped`` (see
+        ``class_counters[Drop()]`` for the split). Returns this call's
         counts."""
         headers = np.asarray(headers)
         fields = classify_headers(headers)
@@ -128,15 +131,22 @@ class TrafficRouter:
             if shedding and sheddable:
                 out["shed"] += 1
                 self.shedder.record_shed()
-            elif act == ACTION_RDMA:
+            elif isinstance(act, Forward):
                 out["rdma"] += 1
-            elif act == ACTION_DROP:
+            elif isinstance(act, Drop):
                 out["dropped"] += 1
-            elif self.rx_ring is not None and self.rx_ring.push(
-                    h, cls=act if isinstance(act, int) else None):
-                out["streamed"] += 1
             else:
-                out[refused] += 1
+                if isinstance(act, Handler):
+                    cls = act.workload_id
+                elif isinstance(act, Chain):
+                    cls = act.tag
+                else:                    # Stream(): untagged
+                    cls = None
+                if self.rx_ring is not None and self.rx_ring.push(
+                        h, cls=cls):
+                    out["streamed"] += 1
+                else:
+                    out[refused] += 1
         for key, n in out.items():
             self.pkt_counters[key] += n
         return out

@@ -17,6 +17,14 @@ ControlMsg argument conventions (all ints unless noted):
   RX-ring ``(addr, count)`` slot spans in arrival order (≤ 2 for a
   whole-ring burst; more when a mixed-class claim interleaves with
   other handlers' slots).
+  chain stages (the dispatcher's ``Chain`` pipelines): the stream-handler
+  args plus a trailing ``in_row`` — the INPUT row width in pool words —
+  because a chain stage's source region is either the RX ring (stage 0)
+  or the upstream stage's slot-mirrored output ring, whose row width the
+  upstream kernel owns. Slot index recovery is
+  ``(addr - in_base) // in_row`` at any stage position. Each chain-stage
+  kernel publishes a ``ChainStageSpec`` (its ``out_row`` plus input-width
+  constraints) that ``register_chain`` composes and validates.
 
 Stream handlers registered here (the dispatch-plane handler mix):
 
@@ -29,6 +37,25 @@ Stream handlers registered here (the dispatch-plane handler mix):
   ``streaming/compress.py`` for its error-feedback system role), writing
   a 65-word row per slot (64 int8 values as f32 + the fp32 scale).
 
+Chain stages registered here (``register_chain_kernels``) — each one a
+generator with the same fetch → ``yield`` → compute/write-back shape as
+the stream handlers, composable into ``Chain`` pipelines:
+
+  ``chain_parse``    — ingress head over FRAMED slots (64 header bytes +
+  a 65-word quant payload per slot, ``FRAME_ROW`` = 129 words): parse
+  the header with the same Pallas program as the stream parser and emit
+  [meta(4) ‖ payload(65)] rows (``PARSED_ROW`` = 69).
+  ``chain_dequant``  — consume the TRAILING ``QUANT_ROW`` words of each
+  input row (int8 lanes as f32 + scale) and emit the dequantized 64-lane
+  f32 row, reusing ``_stream_dequant``'s cached jitted programs.
+  ``chain_compress`` — egress head: int8-quantize 64-lane f32 rows into
+  65-word [q ‖ scale] rows via ``_stream_quant`` (byte parity with
+  ``kops.compress(x, chunk=64)``).
+  ``chain_checksum`` — egress tail over ANY row width: a 2-word
+  [checksum, width] row per input row, the checksum a position-weighted
+  sum of the words' raw bit patterns mod 2^24 (exact in the f32 pool) —
+  the wire-integrity stamp of the compress→checksum gradient chain.
+
 Correctness contract: outputs are byte-identical to the host-side oracles
 in ``repro.kernels.ref`` on the same operand bytes (for the matmul, with
 a single K-block so the fp32 accumulation order matches the oracle's;
@@ -37,6 +64,8 @@ for the quantizer, ``ref_quantize`` row-wise).
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
+from typing import Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -50,8 +79,20 @@ PARSER_WORKLOAD = 0x11
 STREAM_PARSER_WORKLOAD = 0x12
 STREAM_QUANT_WORKLOAD = 0x13
 
+#: chain-stage workload ids (0x20+ keeps them disjoint from handlers)
+CHAIN_PARSE_WORKLOAD = 0x20
+CHAIN_DEQUANT_WORKLOAD = 0x21
+CHAIN_COMPRESS_WORKLOAD = 0x22
+CHAIN_CHECKSUM_WORKLOAD = 0x23
+
 #: one quantize_stream output row: 64 int8 lanes (as f32) + 1 fp32 scale
 QUANT_ROW = HDR_BYTES + 1
+#: one framed ingress-chain slot: RoCE header bytes + quant payload
+FRAME_ROW = HDR_BYTES + QUANT_ROW
+#: one parsed frame row: 4 meta words + the untouched quant payload
+PARSED_ROW = 4 + QUANT_ROW
+#: one checksum row: [checksum mod 2^24, input row width]
+CSUM_ROW = 2
 
 
 def _next_pow2(n: int) -> int:
@@ -150,13 +191,17 @@ def _gather_spans(ctx, ring_peer, ring_rkey, in_loc, spans,
 
 
 def _scatter_rows(ctx, ring_base, out_peer, out_rkey, out_base, out_loc,
-                  spans, row: int) -> None:
+                  spans, row: int, unit: int = HDR_BYTES) -> None:
     """RDMA-WRITE each span's result rows to the handler's class-mirrored
-    output ring at the matching slot indices (``row`` words per slot)."""
+    output ring at the matching slot indices (``row`` words per output
+    slot). ``unit`` is the INPUT region's row width — spans address the
+    source ring, so slot recovery divides by the source row size
+    (``HDR_BYTES`` for the classic packet-ring handlers; a chain stage
+    passes its own ``in_row``)."""
     off = 0
     for addr, cnt in spans:
         if cnt:
-            slot0 = (addr - ring_base) // HDR_BYTES
+            slot0 = (addr - ring_base) // unit
             ctx.write_remote(out_peer, out_rkey, out_loc + off,
                              out_base + slot0 * row, cnt * row)
             off += cnt * row
@@ -286,6 +331,134 @@ def lc_quantize_stream(ctx, ring_peer, ring_rkey, ring_base,
                   spans, QUANT_ROW)
     ctx.commit(wait=ctx.eager_writeback)
     return out_base
+
+
+# --------------------------------------------------------------- chains
+@dataclass(frozen=True)
+class ChainStageSpec:
+    """Row geometry one chain-stage kernel publishes so
+    ``StreamDispatcher.register_chain`` can compose and validate a
+    pipeline: the stage's fixed output row width, plus what it demands
+    of its input rows (``fixed_in_row`` pins the width exactly,
+    ``min_in_row`` lower-bounds it — e.g. the dequantize stage consumes
+    the trailing ``QUANT_ROW`` words of however wide a row the upstream
+    emits)."""
+    out_row: int
+    fixed_in_row: Optional[int] = None
+    min_in_row: int = 1
+
+
+def _checksum_rows(rows: np.ndarray) -> np.ndarray:
+    """(n, w) f32 rows → (n, 2) f32 [checksum, w] integrity rows.
+
+    The checksum is the position-weighted sum of each word's raw 32-bit
+    pattern, ``sum((i+1) * bits_i) mod 2^24`` in int64 — mod 2^24 keeps
+    the value exactly representable in the f32 pool, and hashing the bit
+    patterns (not the float values) makes the stamp sensitive to every
+    payload bit, including NaN payloads and signed zeros."""
+    rows = np.ascontiguousarray(np.asarray(rows, np.float32))
+    bits = rows.view(np.uint32).astype(np.int64)
+    w = np.arange(1, rows.shape[1] + 1, dtype=np.int64)
+    csum = (bits * w).sum(axis=1) % (1 << 24)
+    out = np.stack([csum, np.full_like(csum, rows.shape[1])], axis=1)
+    return out.astype(np.float32)
+
+
+def _chain_stage_kernel(compute, out_row: int):
+    """Build one chain-stage generator kernel from a row-batch compute
+    fn. The generator shape matches the stream handlers — gather the
+    input spans (``in_row`` words per slot) with loopback READs armed
+    deferred, ``yield`` for the shared flush, then compute and
+    RDMA-WRITE slot-mirrored ``out_row``-word rows — so a stage pipelines
+    through ``_service_grouped`` exactly like any handler, and its
+    write-back region is the next stage's fetch source."""
+    def stage(ctx, in_peer, in_rkey, in_base, out_peer, out_rkey,
+              out_base, spans, in_row, *, interpret: bool = True):
+        n = sum(cnt for _, cnt in spans)
+        nwords = n * in_row
+        in_loc = ctx.alloc(nwords)
+        out_loc = ctx.alloc(n * out_row)
+        _gather_spans(ctx, in_peer, in_rkey, in_loc, spans, in_row)
+        ctx.commit(wait=False)   # armed: the service loop flushes
+        yield                    # ...and resumes once the gather lands
+        if ctx.failed:
+            raise RuntimeError(
+                f"chain stage gather failed: {ctx.failed[0].status.value}")
+        rows = ctx.load(in_loc, nwords).reshape(n, in_row)
+        out = compute(rows, interpret)
+        ctx.store(out_loc, np.asarray(out, np.float32).reshape(-1))
+        _scatter_rows(ctx, in_base, out_peer, out_rkey, out_base,
+                      out_loc, spans, out_row, unit=in_row)
+        ctx.commit(wait=ctx.eager_writeback)
+        return out_base
+    return stage
+
+
+def _parse_frame_rows(rows: np.ndarray, interpret: bool) -> np.ndarray:
+    """(n, FRAME_ROW) framed slots → (n, PARSED_ROW) [meta ‖ payload]:
+    the header bytes run through the SAME cached Pallas parser as the
+    stream handler; the quant payload passes through untouched for the
+    next stage."""
+    hdrs = np.asarray(rows[:, :HDR_BYTES], np.uint8)
+    meta = np.asarray(_parse_bucketed(hdrs, interpret), np.float32)
+    return np.concatenate([meta, np.asarray(rows[:, HDR_BYTES:],
+                                            np.float32)], axis=1)
+
+
+def _dequant_trailing_rows(rows: np.ndarray, interpret: bool) -> np.ndarray:
+    """(n, ≥QUANT_ROW) rows → (n, 64) f32: dequantize the TRAILING
+    ``QUANT_ROW`` words (64 int8 lanes as f32 + the fp32 scale) with the
+    cached ``_stream_dequant`` programs — leading words (e.g. the parse
+    stage's meta) are pass-by metadata this stage ignores."""
+    q = np.asarray(rows[:, -QUANT_ROW:-1], np.float32).astype(np.int8)
+    s = np.asarray(rows[:, -1:], np.float32)
+    return _dequant_bucketed(q, s, interpret)
+
+
+def _compress_rows(rows: np.ndarray, interpret: bool) -> np.ndarray:
+    """(n, 64) f32 rows → (n, QUANT_ROW) [q ‖ scale] rows via the cached
+    ``_stream_quant`` programs — byte parity with
+    ``kops.compress(x, chunk=64)`` row-wise."""
+    q, s = _quant_bucketed(np.asarray(rows, np.float32), interpret)
+    return np.concatenate([np.asarray(q, np.float32),
+                           np.asarray(s, np.float32)], axis=1)
+
+
+def _checksum_stage_rows(rows: np.ndarray, interpret: bool) -> np.ndarray:
+    del interpret                # exact integer math, no Pallas program
+    return _checksum_rows(rows)
+
+
+#: workload id → (stage kernel compute fn, spec) of every chain-capable
+#: kernel ``register_chain_kernels`` installs.
+CHAIN_STAGES = {
+    CHAIN_PARSE_WORKLOAD: (
+        "chain_parse", _parse_frame_rows,
+        ChainStageSpec(out_row=PARSED_ROW, fixed_in_row=FRAME_ROW)),
+    CHAIN_DEQUANT_WORKLOAD: (
+        "chain_dequant", _dequant_trailing_rows,
+        ChainStageSpec(out_row=HDR_BYTES, min_in_row=QUANT_ROW)),
+    CHAIN_COMPRESS_WORKLOAD: (
+        "chain_compress", _compress_rows,
+        ChainStageSpec(out_row=QUANT_ROW, fixed_in_row=HDR_BYTES)),
+    CHAIN_CHECKSUM_WORKLOAD: (
+        "chain_checksum", _checksum_stage_rows,
+        ChainStageSpec(out_row=CSUM_ROW)),
+}
+
+
+def register_chain_kernels(block, interpret: bool = True,
+                           weight: int = 1):
+    """Register the chain-capable stage kernels on a block, attaching
+    each one's ``ChainStageSpec`` so ``register_chain`` can validate
+    pipeline composition. Idempotent per block for already-registered
+    ids is NOT supported (same contract as ``register``)."""
+    for wid, (name, compute, spec) in CHAIN_STAGES.items():
+        fn = functools.partial(_chain_stage_kernel(compute, spec.out_row),
+                               interpret=interpret)
+        k = block.register(wid, fn, name, weight=weight)
+        k.stage_spec = spec
+    return block
 
 
 def register_default_kernels(block, interpret: bool = True,

@@ -93,7 +93,8 @@ class TestInjectedRegression:
         assert names == {"BENCH_transport.json", "BENCH_fairness.json",
                          "BENCH_lc_offload.json", "BENCH_streaming.json",
                          "BENCH_dispatch.json", "BENCH_reliability.json",
-                         "BENCH_kv_serve.json", "BENCH_collectives.json"}
+                         "BENCH_kv_serve.json", "BENCH_collectives.json",
+                         "BENCH_chains.json"}
         for g in ci_gate.GATES:
             compile_rules = [r for r in g.rules if "compile" in r.key]
             assert compile_rules, f"{g.name} gates no compile counts"
@@ -244,6 +245,58 @@ class TestInjectedRegression:
                 ("overlap.overlap_fraction", 0.0),
                 ("fairness.serving_jain", 0.66),
                 ("chaos.parity_10pct_drop", False)):
+            rec = json.loads(json.dumps(base))
+            node = rec
+            *parents, leaf = key.split(".")
+            for p in parents:
+                node = node[p]
+            node[leaf] = bad
+            msgs = check_gate(g, rec, base)
+            assert len(msgs) == 1 and key in msgs[0], (key, msgs)
+
+    def test_chains_gate_pins_pipeline_keys(self):
+        """The chains gate's schema: zero-tolerance steady-state compile
+        counts, stage/egress byte parity + checksum stamps, the shared
+        inter-stage flush win, exact chain completion, chaos parity with
+        a zero-compile retransmit path, and the model's chained win —
+        injecting a regression into each key fails on exactly that key."""
+        g = next(g for g in ci_gate.GATES if g.name == "chains")
+        keys = {r.key for r in g.rules}
+        assert {"warm_descriptor_compiles", "warm_qdma_compiles",
+                "stage_parity", "egress_parity", "checksums_ok",
+                "flush_ratio_staged_over_chained", "chain_completion",
+                "chaos.parity_10pct_drop",
+                "chaos.warm_descriptor_compiles",
+                "model.flush_ratio",
+                "model.chained_speedup_vs_staged"} <= keys
+        for key in ("warm_descriptor_compiles", "warm_qdma_compiles",
+                    "chaos.warm_descriptor_compiles"):
+            rule = next(r for r in g.rules if r.key == key)
+            assert rule.direction == "<=" and rule.tolerance == 0.0
+        completion = next(r for r in g.rules if r.key == "chain_completion")
+        assert completion.direction == "==" and completion.tolerance == 0.0
+        base = {"warm_descriptor_compiles": 0, "warm_qdma_compiles": 0,
+                "stage_parity": True, "egress_parity": True,
+                "checksums_ok": True,
+                "flush_ratio_staged_over_chained": 1.2,
+                "chain_completion": 1.0,
+                "chaos": {"parity_10pct_drop": True,
+                          "warm_descriptor_compiles": 0},
+                "model": {"flush_ratio": 1.83,
+                          "chained_speedup_vs_staged": 1.61}}
+        assert check_gate(g, json.loads(json.dumps(base)), base) == []
+        for key, bad in (
+                ("warm_descriptor_compiles", 2),
+                ("warm_qdma_compiles", 1),
+                ("stage_parity", False),
+                ("egress_parity", False),
+                ("checksums_ok", False),
+                ("flush_ratio_staged_over_chained", 0.9),
+                ("chain_completion", 0.8),
+                ("chaos.parity_10pct_drop", False),
+                ("chaos.warm_descriptor_compiles", 4),
+                ("model.flush_ratio", 0.5),
+                ("model.chained_speedup_vs_staged", 0.5)):
             rec = json.loads(json.dumps(base))
             node = rec
             *parents, leaf = key.split(".")

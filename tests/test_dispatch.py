@@ -6,6 +6,11 @@ Contracts pinned here:
   ranges inclusive, unnamed fields wildcard, unknown fields raise, the
   default action catches everything else; vectorized ``classify`` agrees
   with scalar ``match``;
+* the STRUCTURED Action API — ``Forward``/``Drop``/``Stream``/
+  ``Handler``/``Chain`` actions with the shed flag folded in; legacy
+  int/sentinel actions classify identically through the ``as_action``
+  deprecation shim (one warning each) while no in-repo caller uses
+  them;
 * full-field classification — ``classify_headers`` returns the raw
   parsed vectors (opcode/dest_qp unmasked) so non-RDMA classes stay
   separable, consistent with the ``ref_parse_fields`` oracle and with
@@ -24,8 +29,7 @@ Contracts pinned here:
 * bucket pre-warm — replaying a ``bucket_hist`` on a fresh transport
   leaves zero cold-start cache misses and does not touch the pool;
 * rkey determinism — engines mint identical rkey sequences regardless
-  of construction order (the module-global counter is a deprecated
-  shim, not the allocator).
+  of construction order; the module-global ``next_rkey`` shim is GONE.
 """
 import os
 import subprocess
@@ -37,9 +41,11 @@ import pytest
 
 from repro.core.lookaside import LookasideBlock
 from repro.core.rdma import RDMAEngine
-from repro.core.streaming import (ACTION_DROP, ACTION_RDMA, MatchTable,
-                                  RXRing, StreamDispatcher, TrafficRouter,
-                                  classify_headers, make_roce_header)
+from repro.core.streaming import (Chain, Drop, Forward, Handler,
+                                  MatchTable, RXRing, Stream,
+                                  StreamDispatcher, TrafficRouter,
+                                  as_action, classify_headers,
+                                  make_roce_header)
 from repro.kernels import ref
 from repro.kernels.lc_offload import (QUANT_ROW, STREAM_PARSER_WORKLOAD,
                                       STREAM_QUANT_WORKLOAD,
@@ -80,10 +86,10 @@ def _mixed_headers(n):
 
 
 def _table():
-    return (MatchTable(default=ACTION_DROP)
-            .add(ACTION_RDMA, priority=10, is_rdma=1)
-            .add(STREAM_PARSER_WORKLOAD, udp_dport=CTRL_PORT)
-            .add(STREAM_QUANT_WORKLOAD, udp_dport=BULK_PORT))
+    return (MatchTable(default=Drop())
+            .add(Forward(), priority=10, is_rdma=1)
+            .add(Handler(STREAM_PARSER_WORKLOAD), udp_dport=CTRL_PORT)
+            .add(Handler(STREAM_QUANT_WORKLOAD), udp_dport=BULK_PORT))
 
 
 def _dispatch_setup(depth=16, burst=8, pipeline_depth=4, policy="drop"):
@@ -120,36 +126,38 @@ def _want_quant(hdrs):
 
 class TestMatchTable:
     def test_priority_and_tie_break(self):
-        t = (MatchTable(default="d")
-             .add("low", priority=1, udp_dport=80)
-             .add("hi", priority=9, udp_dport=80)
-             .add("tie", priority=9, udp_dport=80))
+        t = (MatchTable(default=Drop())
+             .add(Handler(1), priority=1, udp_dport=80)
+             .add(Handler(2), priority=9, udp_dport=80)
+             .add(Handler(3), priority=9, udp_dport=80))
         vec = np.zeros(len(FIELD_NAMES), np.int64)
         vec[F["udp_dport"]] = 80
-        assert t.match(vec) == "tie"          # priority, then latest
+        assert t.match(vec) == Handler(3)     # priority, then latest
         vec[F["udp_dport"]] = 81
-        assert t.match(vec) == "d"            # default catches the rest
+        assert t.match(vec) == Drop()         # default catches the rest
 
     def test_ranges_inclusive_and_wildcards(self):
-        t = MatchTable(default=0).add(7, opcode=(6, 11))
-        for op, want in ((5, 0), (6, 7), (11, 7), (12, 0)):
+        t = MatchTable(default=Drop()).add(Handler(7), opcode=(6, 11))
+        for op, want in ((5, Drop()), (6, Handler(7)), (11, Handler(7)),
+                         (12, Drop())):
             vec = np.zeros(len(FIELD_NAMES), np.int64)
             vec[F["opcode"]] = op
             assert t.match(vec) == want, op
 
     def test_multi_field_entries_are_conjunctions(self):
-        t = MatchTable(default="no").add("yes", is_rdma=1, opcode=(12, 12))
+        t = MatchTable(default=Drop()).add(Forward(), is_rdma=1,
+                                           opcode=(12, 12))
         vec = np.zeros(len(FIELD_NAMES), np.int64)
         vec[F["is_rdma"]], vec[F["opcode"]] = 1, 12
-        assert t.match(vec) == "yes"
+        assert t.match(vec) == Forward()
         vec[F["opcode"]] = 13
-        assert t.match(vec) == "no"
+        assert t.match(vec) == Drop()
 
     def test_unknown_field_and_empty_range_raise(self):
         with pytest.raises(KeyError, match="unknown match field"):
-            MatchTable().add(1, not_a_field=3)
+            MatchTable().add(Forward(), not_a_field=3)
         with pytest.raises(ValueError, match="empty range"):
-            MatchTable().add(1, opcode=(5, 2))
+            MatchTable().add(Forward(), opcode=(5, 2))
 
     def test_classify_agrees_with_match(self):
         t = _table()
@@ -157,13 +165,58 @@ class TestMatchTable:
         fields = classify_headers(hdrs)
         acts = t.classify(fields)
         assert acts == [t.match(v) for v in fields]
-        assert acts[::3] == [ACTION_RDMA] * 4
-        assert acts[1::3] == [STREAM_PARSER_WORKLOAD] * 4
-        assert acts[2::3] == [STREAM_QUANT_WORKLOAD] * 4
+        assert acts[::3] == [Forward()] * 4
+        assert acts[1::3] == [Handler(STREAM_PARSER_WORKLOAD)] * 4
+        assert acts[2::3] == [Handler(STREAM_QUANT_WORKLOAD)] * 4
 
-    def test_handler_ids_lists_int_actions(self):
+    def test_handler_ids_lists_handler_actions(self):
         assert _table().handler_ids == [STREAM_PARSER_WORKLOAD,
                                         STREAM_QUANT_WORKLOAD]
+
+
+class TestActionAPI:
+    def test_shed_folds_into_the_action(self):
+        t = (MatchTable(default=Stream())
+             .add(Forward(), is_rdma=1)
+             .add(Stream(shed=True), udp_dport=80))
+        vec = np.zeros(len(FIELD_NAMES), np.int64)
+        vec[F["udp_dport"]] = 80
+        assert t.match(vec).shed
+        vec[F["udp_dport"]] = 81
+        assert not t.match(vec).shed
+        # the add(..., shed=True) spelling folds too, and never marks Drop
+        t2 = MatchTable().add(Handler(5), shed=True, udp_dport=80)
+        assert t2.entries[0].action == Handler(5, shed=True)
+        assert as_action(Drop(), shed=True) == Drop()
+
+    def test_chain_tag_deterministic_and_disjoint(self):
+        c = Chain((0x22, 0x23), name="egress")
+        assert c.tag == Chain((0x22, 0x23)).tag          # name-independent
+        assert c.tag != Chain((0x23, 0x22)).tag          # order matters
+        assert c.tag >> 24 == 0x43                       # disjoint from wids
+        assert c.stages == (0x22, 0x23)
+        with pytest.raises(ValueError):
+            Chain(())
+
+    def test_legacy_int_and_sentinel_actions_classify_identically(self):
+        """The deprecation shim: a legacy int/sentinel table classifies
+        EXACTLY like its structured twin, one warning per coercion."""
+        with pytest.warns(DeprecationWarning) as rec:
+            legacy = (MatchTable(default="drop")
+                      .add("rdma", priority=10, is_rdma=1)
+                      .add(STREAM_PARSER_WORKLOAD, udp_dport=CTRL_PORT)
+                      .add(STREAM_QUANT_WORKLOAD, udp_dport=BULK_PORT))
+        assert len(rec) == 3 + 1                         # 3 adds + default
+        fields = classify_headers(_mixed_headers(12))
+        assert legacy.classify(fields) == _table().classify(fields)
+        assert legacy.handler_ids == _table().handler_ids
+
+    def test_shim_rejects_unknown_actions(self):
+        with pytest.raises(TypeError, match="unsupported table action"):
+            as_action("tie")
+        with pytest.raises(TypeError):
+            as_action(True)                              # bool is not a wid
+        assert as_action(Forward()) == Forward()         # passthrough
 
 
 class TestFullFieldClassifier:
@@ -262,12 +315,13 @@ class TestDispatchParity:
         assert eng.stats["transport"]["rx_ring_swept"] == 1
         assert eng.stats["transport"]["rx_ring_consumed"] == 1
 
-    def test_unregistered_int_default_still_sweeps_orphans(self):
-        """An int default that was never registered as a handler must
-        not suppress the orphan sweep — otherwise untagged slots wedge
-        the ring forever."""
+    def test_unregistered_handler_default_still_sweeps_orphans(self):
+        """A Handler default that was never registered must not suppress
+        the orphan sweep — otherwise untagged slots wedge the ring
+        forever."""
         eng, blk, ring, _, _ = _dispatch_setup(depth=4, burst=4)
-        disp = StreamDispatcher(blk, ring, MatchTable(default=0x99),
+        disp = StreamDispatcher(blk, ring,
+                                MatchTable(default=Handler(0x99)),
                                 burst=4)
         mr = eng.register_mr(DATA_PEER, 0, 16)
         disp.register_handler(STREAM_PARSER_WORKLOAD, DATA_PEER,
@@ -322,7 +376,7 @@ import jax.numpy as jnp
 from repro.core.lookaside import LookasideBlock
 from repro.core.rdma import RDMAEngine
 from repro.core.rdma.transport import ICITransport
-from repro.core.streaming import (ACTION_DROP, ACTION_RDMA, MatchTable,
+from repro.core.streaming import (Drop, Forward, Handler, MatchTable,
                                   RXRing, StreamDispatcher, TrafficRouter,
                                   make_roce_header)
 from repro.kernels import ref
@@ -353,10 +407,10 @@ register_default_kernels(blk)
 ring = RXRing(eng, peer=0, base=POOL - 16 * 64, depth=16)
 meta_mr = eng.register_mr(1, 0, 16 * 4)
 quant_mr = eng.register_mr(1, 2048, 16 * QUANT_ROW)
-table = (MatchTable(default=ACTION_DROP)
-         .add(ACTION_RDMA, priority=10, is_rdma=1)
-         .add(STREAM_PARSER_WORKLOAD, udp_dport=9000)
-         .add(STREAM_QUANT_WORKLOAD, udp_dport=9100))
+table = (MatchTable(default=Drop())
+         .add(Forward(), priority=10, is_rdma=1)
+         .add(Handler(STREAM_PARSER_WORKLOAD), udp_dport=9000)
+         .add(Handler(STREAM_QUANT_WORKLOAD), udp_dport=9100))
 disp = StreamDispatcher(blk, ring, table, burst=8)
 disp.register_handler(STREAM_PARSER_WORKLOAD, 1, meta_mr.rkey, 0)
 disp.register_handler(STREAM_QUANT_WORKLOAD, 1, quant_mr.rkey, 2048)
@@ -499,14 +553,11 @@ class TestRkeyDeterminism:
         assert e1.register_mr(1, 0, 32).rkey == RKEY_BASE + 3
         assert e2.register_mr(1, 0, 32).rkey == RKEY_BASE + 3
 
-    def test_module_shim_still_counts(self):
-        """verbs.next_rkey stays as a deprecated shim for out-of-tree
-        callers: monotonic, warning, minting from a high disjoint range
-        that can never alias engine-allocated rkeys."""
-        from repro.core.rdma.verbs import RKEY_BASE, next_rkey
-        with pytest.warns(DeprecationWarning, match="per engine"):
-            a, b = next_rkey(), next_rkey()
-        assert b == a + 1
-        assert a & 0x8000_0000                  # disjoint shim range
+    def test_module_shim_is_gone(self):
+        """Satellite: the PR-5 deprecated module-global allocator is
+        REMOVED — per-engine ``register_mr`` is the only rkey source."""
+        from repro.core.rdma import verbs
+        assert not hasattr(verbs, "next_rkey")
+        assert not hasattr(verbs, "_rkey_counter")
         eng = RDMAEngine(n_peers=2, pool_size=1024)
-        assert eng.register_mr(0, 0, 64).rkey == RKEY_BASE
+        assert eng.register_mr(0, 0, 64).rkey == verbs.RKEY_BASE

@@ -22,8 +22,7 @@ from repro.core.rdma import (CQEStatus, FaultInjector, FaultProfile,
                              LoadShedder, Opcode, QPState, RDMAEngine,
                              ReliabilityConfig, WQE)
 from repro.core.streaming.classifier import TrafficRouter, make_roce_header
-from repro.core.streaming.dispatch import (ACTION_RDMA, ACTION_STREAM,
-                                           MatchTable)
+from repro.core.streaming.dispatch import Forward, MatchTable, Stream
 from repro.core.streaming.rx_ring import RXRing
 from repro.runtime.fault_tolerance import (EngineHeartbeatBridge,
                                            HeartbeatMonitor)
@@ -365,9 +364,9 @@ class TestLoadShedding:
 
     def test_ingress_sheds_marked_rows_under_pressure(self):
         eng, inj, qp = self._pressured_engine()
-        table = (MatchTable(default=ACTION_STREAM)
-                 .add(ACTION_RDMA, is_rdma=1)
-                 .add(ACTION_STREAM, shed=True, udp_dport=80))
+        table = (MatchTable(default=Stream())
+                 .add(Forward(), is_rdma=1)
+                 .add(Stream(shed=True), udp_dport=80))
         router = TrafficRouter(rx_ring=RXRing(eng, peer=1, depth=8),
                                table=table,
                                shedder=LoadShedder(eng, threshold=1))
