@@ -1,0 +1,238 @@
+# Self-tuning transport (the PR-10 tentpole), measured end to end:
+#
+#  1. ONLINE BUCKET LEARNER — a live transport's decaying (slots, chunk)
+#     histogram must drive prewarm() on a fresh transport to ZERO
+#     cold-start descriptor misses (and zero steady-state compiles)
+#     without a recorded bucket_hist tape, including traffic that then
+#     shifts one pow2 bucket outward (the widened prediction).
+#  2. AUTO-SWEEP TUNER — the seeded coordinate sweep over ring_burst x
+#     pipeline_depth x flush_budget x qp_window must (a) choose a point
+#     scoring >= the hand-picked defaults (the default is in the grid, so
+#     this holds by construction — the bench asserts it stays true),
+#     (b) be deterministic (a second sweep with the same seed picks the
+#     identical point), and (c) run its trials warm: the second sweep
+#     adds ZERO process-wide descriptor compiles.
+#
+# Prints CSV rows and (optionally) writes BENCH_autotune.json.
+import json
+import time
+
+import numpy as np
+
+POOL = 4096
+N_DOORBELLS = 40
+WQES_PER_DOORBELL = 8
+SEED = 7
+
+
+def _workload(rng, n_doorbells: int, lo: int = 1, hi: int = 49):
+    """Address-varying doorbell batches with lengths in [lo, hi): the
+    default range spans chunk buckets 16/32/64 and runs the 64-bucket at
+    0.75 fill, so the learner's widened prediction covers 128."""
+    plans = []
+    for _ in range(n_doorbells):
+        plan = []
+        for _ in range(WQES_PER_DOORBELL):
+            ln = int(rng.integers(lo, hi))
+            sa = int(rng.integers(0, POOL // 2 - ln))
+            da = int(rng.integers(POOL // 2, POOL - ln))
+            plan.append(("xfer", 0, 1, sa, da, ln))
+        plans.append(plan)
+    return plans
+
+
+def measure_learner(n_doorbells: int = N_DOORBELLS) -> dict:
+    import jax.numpy as jnp
+    from repro.core.rdma.transport import (LocalTransport,
+                                           descriptor_cache_size)
+
+    rng = np.random.default_rng(SEED)
+    init = jnp.asarray(rng.standard_normal((2, POOL)), jnp.float32)
+    plans = _workload(np.random.default_rng(SEED), n_doorbells)
+
+    # live transport: every dispatch feeds the online learner
+    t_live = LocalTransport(init)
+    for p in plans:
+        t_live.execute_batch(p)
+    learner_stats = {k: t_live.stats[k] for k in
+                     ("learned_buckets", "bucket_merges",
+                      "bucket_decay_events")}
+
+    # cold replay: same plans on a fresh transport -> per-bucket misses
+    t_cold = LocalTransport(init)
+    for p in plans:
+        t_cold.execute_batch(p)
+    cold_misses = t_cold.stats["cache_misses"]
+
+    # learned prewarm: a fresh transport warms from the LIVE transport's
+    # learner (no recorded tape), then replays the same plans
+    t_warm = LocalTransport(init)
+    prewarmed = t_warm.prewarm(t_live.bucket_learner)
+    c0 = descriptor_cache_size()
+    for p in plans:
+        t_warm.execute_batch(p)
+    steady_compiles = descriptor_cache_size() - c0
+    prewarm_misses = t_warm.stats["cache_misses"]
+    parity = bool(np.array_equal(np.asarray(t_cold.pool),
+                                 np.asarray(t_warm.pool)))
+
+    # shifted traffic: one pow2 bucket OUT of the observed range — the
+    # widened prediction must already have it warm on this transport
+    shifted = _workload(np.random.default_rng(SEED + 1),
+                        max(4, n_doorbells // 4), lo=65, hi=129)
+    m0 = t_warm.stats["cache_misses"]
+    for p in shifted:
+        t_warm.execute_batch(p)
+    shift_misses = t_warm.stats["cache_misses"] - m0
+
+    # self-prewarm on the live transport is a no-op: everything its own
+    # learner predicts inside the observed range is already compiled
+    self_new = t_live.prewarm()
+    return {
+        "doorbells": n_doorbells,
+        "cold_misses": cold_misses,
+        "prewarmed_buckets": prewarmed,
+        "learned_prewarm_misses": prewarm_misses,
+        "steady_state_compiles": steady_compiles,
+        "prewarm_parity": parity,
+        "widened_shift_misses": shift_misses,
+        "self_prewarm_observed_range_new": 0 if self_new == 0 else self_new,
+        **learner_stats,
+    }
+
+
+def measure_tuner(rows: int = 128, passes: int = 2) -> dict:
+    from repro.core.rdma.autotune import AutoTuner
+    from repro.core.rdma.engine import RDMAEngine
+    from repro.core.rdma.simulator import predict_from_stats
+    from repro.core.rdma.transport import descriptor_cache_size
+    from repro.core.rdma.verbs import Opcode, WQE
+
+    # live engine with its own traffic profile (feeds the learner the
+    # buckets the tuner's trial lengths are drawn from)
+    eng = RDMAEngine(n_peers=2, pool_size=POOL)
+    mr = eng.register_mr(1, 0, POOL // 4)
+    qp = eng.create_qp(0, 1)
+    rng = np.random.default_rng(SEED)
+    for i in range(8):
+        ln = int(rng.integers(8, 48))
+        eng.post_send(qp, WQE(Opcode.READ, qp.qp_num, wr_id=i,
+                              local_addr=int(rng.integers(0, POOL // 4 - ln)),
+                              remote_addr=int(rng.integers(0, POOL // 4 - ln)),
+                              length=ln, rkey=mr.rkey))
+    eng.ring_sq_doorbell(qp)
+
+    t0 = time.perf_counter()
+    tuner1 = AutoTuner(eng, seed=SEED, passes=passes, rows=rows)
+    chosen1 = tuner1.sweep(apply=False)
+    sweep1_s = time.perf_counter() - t0
+    at = dict(eng.stats["autotune"])
+
+    # determinism + warm trials: a SECOND sweep from the same starting
+    # point, fresh tuner, same seed — identical chosen point, identical
+    # surface scores, zero new process-wide descriptor compiles (every
+    # trial re-enters buckets sweep #1 already compiled). Only then is
+    # the chosen point installed on the live engine.
+    c0 = descriptor_cache_size()
+    tuner2 = AutoTuner(eng, seed=SEED, passes=passes, rows=rows)
+    chosen2 = tuner2.sweep(apply=False)
+    warm_compiles = descriptor_cache_size() - c0
+    eng.stats["autotune"] = at
+    eng.apply_tuning(chosen1)
+    def _surface(t):
+        return sorted(((r.tuning.key(), r.flushes, r.wqes,
+                        round(r.score, 6)) for r in t.surface), key=str)
+
+    surface1, surface2 = _surface(tuner1), _surface(tuner2)
+    model = predict_from_stats(eng.stats, payload=128)
+    return {
+        "seed": SEED,
+        "passes": passes,
+        "rows_per_trial": rows,
+        "trials": at["trials"],
+        "chosen": at["chosen"],
+        "default": at["default"],
+        "score": at["score"],
+        "default_score": at["default_score"],
+        "improvement": at["improvement"],
+        "tuned_at_least_default": bool(at["improvement"] >= 1.0 - 1e-9),
+        "sweep_deterministic": bool(chosen1 == chosen2
+                                    and surface1 == surface2),
+        "warm_descriptor_compiles": warm_compiles,
+        "applied_to_engine": bool(
+            eng.flush_budget == chosen1.flush_budget
+            and eng.qp_window == chosen1.qp_window
+            and eng.tuning == chosen1),
+        "sweep_wall_s": sweep1_s,
+        "cost_model": {k: v for k, v in model.items()
+                       if k.startswith("autotune_")
+                       or k in ("learned_buckets", "bucket_merges",
+                                "bucket_decay_events")},
+    }
+
+
+def run(verbose: bool = True, smoke: bool = True, out_json: str = ""):
+    learner = measure_learner(N_DOORBELLS if not smoke else 20)
+    tuner = measure_tuner(rows=128, passes=1 if smoke else 2)
+    rec = {"learner": learner, "tuner": tuner}
+
+    if verbose:
+        print(f"autotune_learner_prewarm,0.0,{learner['cold_misses']}cold->"
+              f"{learner['learned_prewarm_misses']}learned_misses"
+              f"({learner['prewarmed_buckets']}buckets)")
+        print(f"autotune_learner_steady_compiles,0.0,"
+              f"{learner['steady_state_compiles']}")
+        print(f"autotune_learner_widened_shift,0.0,"
+              f"{learner['widened_shift_misses']}misses_one_bucket_out")
+        print(f"autotune_learner_ledger,0.0,"
+              f"buckets={learner['learned_buckets']},"
+              f"merges={learner['bucket_merges']},"
+              f"decays={learner['bucket_decay_events']}")
+        ch = tuner["chosen"]
+        print(f"autotune_sweep_chosen,{tuner['sweep_wall_s'] * 1e3:.0f},"
+              f"burst={ch['ring_burst']},depth={ch['pipeline_depth']},"
+              f"budget={ch['flush_budget']},window={ch['qp_window']}")
+        print(f"autotune_sweep_improvement,0.0,"
+              f"{tuner['improvement']:.2f}x_over_defaults"
+              f"({tuner['trials']}trials)")
+        print(f"autotune_sweep_deterministic,0.0,"
+              f"{tuner['sweep_deterministic']}")
+        print(f"autotune_sweep_warm_compiles,0.0,"
+              f"{tuner['warm_descriptor_compiles']}")
+
+    assert learner["learned_prewarm_misses"] == 0, (
+        "learned prewarm must leave zero cold-start misses, got "
+        f"{learner['learned_prewarm_misses']}")
+    assert learner["steady_state_compiles"] == 0, (
+        "steady-state replay after learned prewarm must compile nothing, "
+        f"got {learner['steady_state_compiles']}")
+    assert learner["widened_shift_misses"] == 0, (
+        "traffic one pow2 bucket out must hit the widened prediction, "
+        f"got {learner['widened_shift_misses']} misses")
+    assert learner["prewarm_parity"], "learned prewarm corrupted the pool"
+    assert tuner["tuned_at_least_default"], (
+        f"tuned point scored {tuner['score']:.0f} < hand-picked default "
+        f"{tuner['default_score']:.0f}")
+    assert tuner["sweep_deterministic"], (
+        "same-seed sweeps diverged (chosen point or surface)")
+    assert tuner["warm_descriptor_compiles"] == 0, (
+        "second sweep must run warm, compiled "
+        f"{tuner['warm_descriptor_compiles']} new descriptor programs")
+    assert tuner["applied_to_engine"], (
+        "sweep(apply=True) did not install the chosen tuning")
+
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(rec, f, indent=2)
+            f.write("\n")
+        if verbose:
+            print(f"# wrote {out_json}")
+    return rec
+
+
+if __name__ == "__main__":
+    import os
+    import sys
+
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    run(smoke=False, out_json="BENCH_autotune.json")

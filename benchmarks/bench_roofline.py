@@ -22,7 +22,7 @@ def load_records(mesh: str = None):
     return recs
 
 
-def run(verbose: bool = True):
+def run(verbose: bool = True, out_json: str = ""):
     rows = []
     recs = load_records()
     for r in recs:
@@ -41,4 +41,26 @@ def run(verbose: bool = True):
     if verbose:
         for n, us, d in rows:
             print(f"{n},{us:.3f},{d}")
+    if out_json:
+        # Gateable record for ci_gate (scale-invariant: presence/health
+        # flags and ratio floors only — dry-run artifacts are optional on
+        # a CI runner, so has_artifacts gates ">=": it may flip
+        # False->True when artifacts appear but must never silently
+        # regress a baseline recorded WITH artifacts).
+        rec = {
+            "ran_ok": True,
+            "has_artifacts": bool(recs),
+            "cells": len(recs),
+        }
+        if recs:
+            rec["min_useful_ratio"] = min(
+                r["useful_ratio"] for r in recs)
+            rec["max_roofline_fraction"] = max(
+                r["roofline_fraction"] for r in recs)
+        with open(out_json, "w") as f:
+            json.dump(rec, f, indent=2)
+            f.write("\n")
+        if verbose:
+            print(f"# wrote {out_json}")
+        return rec
     return rows

@@ -7,7 +7,8 @@
 #                    multi-device meshes in child processes)
 #   3. bench gate  — scripts/ci_gate.py runs the smoke benchmarks
 #                    (transport / fairness / lc_offload / streaming /
-#                    dispatch / reliability) into
+#                    dispatch / reliability / kv_serve / collectives /
+#                    chains / autotune / roofline) into
 #                    ci_artifacts/BENCH_*.ci.json and fails on any gated
 #                    key regressing vs the committed BENCH_*.json
 #                    baselines (per-key schema + messages live there;
@@ -18,7 +19,16 @@
 #                    byte-identical to the perfect wire, compile zero
 #                    new descriptor shapes on the retransmit path, keep
 #                    innocent-QP fairness while a victim retransmits,
-#                    and turn retry exhaustion into terminal CQEs.
+#                    and turn retry exhaustion into terminal CQEs. The
+#                    autotune gate pins the self-tuning transport: the
+#                    online-learned bucket histogram keeps prewarm at
+#                    zero cold-start misses, the seeded knob sweep stays
+#                    deterministic with warm (zero-compile) trials, and
+#                    the tuned point never scores below the hand-picked
+#                    defaults. The roofline gate smoke-runs the
+#                    dry-run-artifact table generator (health flags +
+#                    ratio floors; artifact-free runners skip the
+#                    floors).
 #
 # Usage: scripts/ci.sh
 set -euo pipefail

@@ -172,6 +172,16 @@ def _run_chains(out_json: str, smoke: bool = True) -> dict:
     return bench_chains.run(verbose=True, smoke=smoke, out_json=out_json)
 
 
+def _run_autotune(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_autotune
+    return bench_autotune.run(verbose=True, smoke=smoke, out_json=out_json)
+
+
+def _run_roofline(out_json: str, smoke: bool = True) -> dict:
+    from benchmarks import bench_roofline
+    return bench_roofline.run(verbose=True, out_json=out_json)
+
+
 GATES: Tuple[Gate, ...] = (
     Gate("transport", "BENCH_transport.json", "BENCH_transport.ci.json",
          rules=(
@@ -320,6 +330,39 @@ GATES: Tuple[Gate, ...] = (
              Rule("model.chained_speedup_vs_staged", ">=", 0.05),
          ),
          runner=_run_chains),
+    Gate("autotune", "BENCH_autotune.json", "BENCH_autotune.ci.json",
+         rules=(
+             # the online-learned histogram must keep driving prewarm to
+             # ZERO cold-start misses, zero steady-state compiles, and
+             # zero misses one widened pow2 bucket out — exactly
+             Rule("learner.learned_prewarm_misses", "<="),
+             Rule("learner.steady_state_compiles", "<="),
+             Rule("learner.widened_shift_misses", "<="),
+             Rule("learner.prewarm_parity", "=="),
+             # the seeded sweep stays deterministic (identical chosen
+             # point + surface across two same-seed runs) and its trials
+             # stay warm (zero new descriptor compiles on sweep #2)
+             Rule("tuner.sweep_deterministic", "=="),
+             Rule("tuner.warm_descriptor_compiles", "<="),
+             # tuned >= hand-picked defaults, and the modeled win must
+             # not silently erode below the committed improvement
+             Rule("tuner.tuned_at_least_default", "=="),
+             Rule("tuner.improvement", ">=", 0.25),
+         ),
+         runner=_run_autotune),
+    Gate("roofline", "BENCH_roofline.json", "BENCH_roofline.ci.json",
+         rules=(
+             # scale-invariant health gate: the table generator must run;
+             # has_artifacts may flip False->True when dry-run artifacts
+             # appear (bool ">=") but a baseline recorded WITH artifacts
+             # must not silently lose them; the ratio floors only gate
+             # when the committed baseline carries artifact cells
+             Rule("ran_ok", "=="),
+             Rule("has_artifacts", ">="),
+             Rule("min_useful_ratio", ">=", 0.25),
+             Rule("max_roofline_fraction", ">=", 0.25),
+         ),
+         runner=_run_roofline),
 )
 
 

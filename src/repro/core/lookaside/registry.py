@@ -69,6 +69,7 @@ from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Set
 
 from repro.core.lookaside.control import ControlMsg, FIFO, StatusMsg
+from repro.core.rdma.autotune import TransportTuning
 from repro.core.rdma.verbs import CQE, CQEStatus, Opcode, WQE
 
 
@@ -78,11 +79,15 @@ class LCKernel:
     ``fn(ctx, *args) -> Optional[int]`` accesses memory through an
     ``LCContext`` and returns an optional result address. ``weight`` is
     the fair-scheduler quantum of the kernel's QPs (how hard this kernel
-    may lean on the shared engine per service round).
+    may lean on the shared engine per service round). ``ring_burst`` is
+    the streaming claim size (packets per invocation when an RX ring is
+    attached) — a real constructor parameter, threaded from the block's
+    ``TransportTuning`` by ``LookasideBlock.register`` so tuned and
+    hand-picked configs set it the same way.
     """
 
     def __init__(self, workload_id: int, fn: Callable, name: str = "",
-                 weight: int = 1):
+                 weight: int = 1, ring_burst: int = 32):
         self.workload_id = workload_id
         self.fn = fn
         self.name = name or getattr(fn, "__name__", "kernel")
@@ -93,7 +98,7 @@ class LCKernel:
         self.interrupt_handler: Optional[Callable[[StatusMsg], None]] = None
         self.block = None                    # set by LookasideBlock.register
         self.ring = None                     # set by attach_ring
-        self.ring_burst = 32
+        self.ring_burst = max(1, int(ring_burst))
         self.stream_out = None               # (out_peer, out_rkey, out_base)
         self.dispatcher = None               # one-entry plane (attach_ring)
         # chain-capable kernels declare their row geometry here (a
@@ -234,7 +239,8 @@ class LookasideBlock:
                  scratch_base: Optional[int] = None,
                  scratch_size: Optional[int] = None,
                  eager_writeback: bool = True,
-                 pipeline_depth: int = 1):
+                 pipeline_depth: Optional[int] = None,
+                 tuning: Optional[TransportTuning] = None):
         self.engine = engine                 # shared RDMA engine (paper §I)
         self.peer = peer
         self.scratch_base = (engine.pool_size // 2 if scratch_base is None
@@ -242,6 +248,14 @@ class LookasideBlock:
         self.scratch_size = (engine.pool_size - self.scratch_base
                              if scratch_size is None else scratch_size)
         self.eager_writeback = eager_writeback
+        # Knob resolution: explicit kwarg > block tuning > engine tuning
+        # > historical defaults. The resolved TransportTuning also seeds
+        # ring_burst for every kernel registered on this block.
+        self.tuning = (tuning if tuning is not None
+                       else getattr(engine, "tuning", None)
+                       or TransportTuning())
+        if pipeline_depth is None:
+            pipeline_depth = self.tuning.pipeline_depth
         self.pipeline_depth = max(1, int(pipeline_depth))
         self._part_size = self.scratch_size // self.pipeline_depth
         self._free_parts = list(range(self.pipeline_depth))
@@ -274,19 +288,23 @@ class LookasideBlock:
         self._lp = lp
 
     def register(self, workload_id: int, fn: Callable, name: str = "",
-                 weight: int = 1) -> LCKernel:
+                 weight: int = 1,
+                 ring_burst: Optional[int] = None) -> LCKernel:
         if workload_id in self.kernels:
             raise KeyError(f"workload_id {workload_id} already registered")
-        k = LCKernel(workload_id, fn, name, weight)
+        k = LCKernel(workload_id, fn, name, weight,
+                     ring_burst=(self.tuning.ring_burst
+                                 if ring_burst is None else ring_burst))
         k.block = self
         self.kernels[workload_id] = k
         return k
 
     def attach_ring(self, workload_id: int, ring, out_peer: int,
                     out_rkey: int, out_base: int,
-                    burst: int = 32) -> LCKernel:
+                    burst: Optional[int] = None) -> LCKernel:
         """Bind an ``RXRing`` to a streaming kernel: ``stream()`` drains
-        the ring in bursts of up to ``burst`` packets, and the kernel
+        the ring in bursts of up to ``burst`` packets (``None`` keeps the
+        kernel's tuned ``ring_burst``), and the kernel
         writes each packet's status/metadata row to ``out_base +
         slot_index * row`` on ``out_peer`` (rkey-checked) — the meta ring
         mirrors the packet ring slot-for-slot.
@@ -298,11 +316,12 @@ class LookasideBlock:
                                                    StreamDispatcher)
         k = self.kernels[workload_id]
         k.ring = ring
-        k.ring_burst = max(1, int(burst))
+        if burst is not None:
+            k.ring_burst = max(1, int(burst))
         k.stream_out = (out_peer, out_rkey, out_base)
         k.dispatcher = StreamDispatcher(
             self, ring, MatchTable(default=Handler(workload_id)),
-            burst=burst)
+            burst=k.ring_burst)
         k.dispatcher.register_handler(workload_id, out_peer, out_rkey,
                                       out_base)
         return k

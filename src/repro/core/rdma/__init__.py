@@ -1,3 +1,6 @@
+from repro.core.rdma.autotune import (  # noqa: F401
+    AutoTuner, BucketLearner, TransportTuning, TuningGrid,
+)
 from repro.core.rdma.doorbell import (  # noqa: F401
     DoorbellCoalescer, coalesce_plan, plan_buckets, schedule_plan,
 )

@@ -72,6 +72,7 @@ def schedule_plan(windows: Sequence[Tuple[int, Sequence]],
                   scheduler: str = "rr",
                   weights: Optional[Dict[int, int]] = None,
                   budget: Optional[int] = None,
+                  qp_window: Optional[int] = None,
                   state: Optional[Dict] = None,
                   promote_after: Optional[int] = None,
                   backlog: Optional[Dict[int, int]] = None
@@ -93,6 +94,11 @@ def schedule_plan(windows: Sequence[Tuple[int, Sequence]],
     * budget — at most ``budget`` total entries are taken (``None`` =
       drain everything), so one flush models a bounded engine service
       round,
+    * ``qp_window`` — at most ``qp_window`` entries are taken from any
+      ONE QP (``None`` = no cap): the per-QP share bound the autotuner
+      sweeps, orthogonal to the total budget — a deep SQ in fifo mode
+      (or a drain-mode flush) cannot fill the whole descriptor table.
+      Leftovers stay in the QP's window for the next flush,
     * ``scheduler="rr"`` — stateless weighted round-robin over backlogged
       QPs, ``weights`` (default 1) entries per QP per round: no deep SQ
       can starve the others; with equal weights every backlogged QP's
@@ -132,6 +138,14 @@ def schedule_plan(windows: Sequence[Tuple[int, Sequence]],
     if len(set(ids)) != len(ids):
         raise ValueError("duplicate qp_id in windows")
     weights = weights or {}
+    if qp_window is not None:
+        # per-QP cap: truncate each window to its share bound. The
+        # engine's snapshot is usually pre-capped (``_window_limit``);
+        # capping here keeps schedule_plan independently correct for
+        # direct callers (conformance tests, the fairness simulator).
+        w_cap = max(1, int(qp_window))
+        windows = [(qid, w[:w_cap] if len(w) > w_cap else w)
+                   for qid, w in windows]
     total = sum(len(w) for _, w in windows)
     remaining = total if budget is None else min(budget, total)
     merged: List[tuple] = []

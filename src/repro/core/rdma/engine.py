@@ -33,6 +33,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.rdma.autotune import TransportTuning
 from repro.core.rdma.doorbell import coalesce_plan, schedule_plan
 from repro.core.rdma.reliability import (FaultInjector, ReliabilityConfig,
                                          ReliabilityLayer)
@@ -49,10 +50,30 @@ class RDMAEngine:
     def __init__(self, n_peers: int = 2, pool_size: int = 1 << 16,
                  dtype=np.float32, mesh=None, coalesce: bool = True,
                  scheduler: str = "rr", flush_budget: Optional[int] = None,
-                 promote_after: Optional[int] = None):
+                 promote_after: Optional[int] = None,
+                 qp_window: Optional[int] = None,
+                 tuning: Optional[TransportTuning] = None):
         self.n_peers = n_peers
         self.pool_size = pool_size
         self.coalesce = coalesce
+        # One knob surface (autotune.TransportTuning): explicit kwargs
+        # win over a passed tuning; both fall back to the historical
+        # hand-picked defaults. ``self.flush_budget``/``self.qp_window``
+        # stay plain mutable attributes (benches/demos poke them live);
+        # ``apply_tuning`` re-seeds them from a (tuned) config.
+        if tuning is None:
+            tuning = TransportTuning(flush_budget=flush_budget,
+                                     qp_window=qp_window)
+        self.tuning = tuning
+        if flush_budget is None:
+            flush_budget = tuning.flush_budget
+        if qp_window is None:
+            qp_window = tuning.qp_window
+        # ``qp_window`` caps WQEs any ONE QP contributes to a single
+        # flush (None = no cap): a deep SQ can fill an entire
+        # ``flush_budget`` in fifo mode, or dominate a drain-mode flush;
+        # the window bounds its share without throttling the total.
+        self.qp_window = qp_window
         # Multi-QP doorbell scheduling: when several SQ windows are armed
         # for one flush, "rr" interleaves their WQEs round-robin (weighted
         # by QueuePair.weight) so one deep SQ cannot starve the others;
@@ -120,8 +141,31 @@ class RDMAEngine:
                       "qp_service": {}, "lc_service": {}, "lc_wqes": 0,
                       "qp_bytes": {}, "qp_latency_us": {},
                       "lc_pipeline": {}, "dispatch": {}, "kv_serve": {},
-                      "collectives": {},
+                      "collectives": {}, "autotune": {},
                       "transport": self.transport.stats}
+
+    # ------------------------------------------------------------ tuning
+    def apply_tuning(self, tuning: TransportTuning) -> None:
+        """Install a (hand-picked or swept) ``TransportTuning`` as the
+        live configuration: ``flush_budget``/``qp_window`` take effect at
+        the next flush; ``ring_burst``/``pipeline_depth``/``rx_depth``
+        seed every LookasideBlock / StreamDispatcher / RXRing built from
+        ``engine.tuning`` afterwards (already-built blocks keep the
+        config they were constructed with, like real re-synthesized
+        compute blocks)."""
+        self.tuning = tuning
+        self.flush_budget = tuning.flush_budget
+        self.qp_window = tuning.qp_window
+
+    def _window_limit(self) -> Optional[int]:
+        """Per-QP snapshot cap for one flush: the tighter of the total
+        flush budget (no QP can execute more than that anyway) and the
+        per-QP window."""
+        if self.flush_budget is None:
+            return self.qp_window
+        if self.qp_window is None:
+            return self.flush_budget
+        return min(self.flush_budget, self.qp_window)
 
     # ------------------------------------------------------------------ MRs
     def register_mr(self, peer: int, base: int, length: int,
@@ -285,14 +329,14 @@ class RDMAEngine:
             retx_len: Dict[int, int] = {}
             windows = []
             for qp in self._armed:
-                entries, n_retx = relia.window(qp, self.flush_budget)
+                entries, n_retx = relia.window(qp, self._window_limit())
                 if entries:
                     windows.append((qp, entries))
                     retx_len[qp.qp_num] = n_retx
             backlog = {qp.qp_num: relia.backlog(qp) for qp, _ in windows}
         else:
             retx_len = {}
-            windows = [(qp, qp.pending(self.flush_budget))
+            windows = [(qp, qp.pending(self._window_limit()))
                        for qp in self._armed]
             windows = [(qp, w) for qp, w in windows if w]
             backlog = {qp.qp_num: qp.pending_count for qp, _ in windows}
@@ -307,6 +351,7 @@ class RDMAEngine:
             scheduler=self.scheduler,
             weights={qp.qp_num: qp.weight for qp, _ in windows},
             budget=self.flush_budget,
+            qp_window=self.qp_window,
             state=self._sched_state,
             promote_after=self.promote_after,
             # snapshots are budget-truncated; drr needs the true depth to

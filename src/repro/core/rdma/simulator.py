@@ -288,6 +288,26 @@ def predict_from_stats(stats: Dict, payload: int, op: str = "write",
                 out["host_jain_index"] = jain_fairness_index(host.values())
                 out["host_slowdown_from_lc"] = (
                     total / max(1, total - lc_wqes))
+    # Self-tuning terms (rdma.autotune): the online bucket learner's
+    # decay/merge/size ledger, and — when a knob sweep ran — the chosen
+    # point vs the hand-picked defaults on the modeled flush throughput
+    # (improvement >= 1.0 by construction: the default is in the grid).
+    if (xstats.get("learned_buckets") or xstats.get("bucket_merges")
+            or xstats.get("bucket_decay_events")):
+        out["learned_buckets"] = float(xstats.get("learned_buckets", 0))
+        out["bucket_merges"] = float(xstats.get("bucket_merges", 0))
+        out["bucket_decay_events"] = float(
+            xstats.get("bucket_decay_events", 0))
+    at = stats.get("autotune") or {}
+    if at.get("trials"):
+        out["autotune_trials"] = float(at["trials"])
+        out["autotune_score"] = float(at.get("score", 0.0))
+        out["autotune_default_score"] = float(
+            at.get("default_score", 0.0))
+        out["autotune_improvement"] = float(at.get("improvement", 1.0))
+        chosen = at.get("chosen") or {}
+        for knob in ("ring_burst", "pipeline_depth"):
+            out[f"autotune_chosen_{knob}"] = float(chosen.get(knob) or 0)
     return out
 
 

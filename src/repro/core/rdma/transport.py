@@ -42,12 +42,14 @@ and the simulator's cost model reads via ``predict_from_stats``.
 from __future__ import annotations
 
 import functools
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.rdma.autotune import BucketLearner
 
 PEER_AXIS = "peers"
 
@@ -110,6 +112,12 @@ def _new_stats() -> dict:
             # profile prewarm() replays to pre-compile a handler mix's
             # buckets before the first real packet arrives.
             "bucket_hist": {}, "prewarmed_buckets": 0,
+            # online bucket learner (autotune.BucketLearner — the decaying
+            # histogram prewarm() reads when called with no tape): spans
+            # evicted by weight decay, pow2-adjacent spans merged, and the
+            # current number of learned (slots, chunk) buckets.
+            "bucket_decay_events": 0, "bucket_merges": 0,
+            "learned_buckets": 0,
             # multi-QP scheduler: flushes whose descriptor table mixed
             # WQEs from more than one QP (set by the engine).
             "interleaved_batches": 0,
@@ -290,6 +298,10 @@ class _TransportBase:
         self.stats = _new_stats()
         self._seen_buckets = set()
         self._seen_qdma_buckets = set()
+        # Online (slots, chunk) histogram: every dispatch observes its
+        # shape bucket; ``prewarm()`` with no arguments reads the learned
+        # (decayed, merged, widened) buckets instead of a recorded tape.
+        self.bucket_learner = BucketLearner(stats=self.stats)
         # Reliability harness hook: a seeded reliability.FaultInjector
         # installed here decides, per WQE transmission, whether the wire
         # delivers/drops/duplicates/delays/corrupts it (the engine
@@ -313,7 +325,8 @@ class _TransportBase:
     def wqe_count(self) -> int:
         return self.stats["wqes"]
 
-    def _account(self, key: Tuple[int, int], n_wqes: int) -> None:
+    def _account(self, key: Tuple[int, int], n_wqes: int,
+                 max_len: Optional[int] = None) -> None:
         if key in self._seen_buckets:
             self.stats["cache_hits"] += 1
         else:
@@ -323,20 +336,33 @@ class _TransportBase:
         hist = self.stats["bucket_hist"]
         hkey = f"{key[0]}x{key[1]}"
         hist[hkey] = hist.get(hkey, 0) + 1
+        self.bucket_learner.observe(key[0], key[1], n_wqes=n_wqes,
+                                    max_len=max_len)
         self.stats["dispatches"] += 1
         self.stats["wqes"] += n_wqes
 
-    def prewarm(self, buckets) -> int:
+    def prewarm(self, buckets=None) -> int:
         """Pre-compile descriptor programs for a set of (slots, chunk)
-        shape buckets — the first slice of dynamic bucket tuning: feed a
-        previous run's ``stats['bucket_hist']`` (keys accepted verbatim)
-        or explicit pairs, and the handler mix's steady-state buckets are
-        warm before the first real doorbell, so cold-start cache misses
-        vanish. Each bucket executes one all-zero descriptor table
-        (padded rows are masked no-ops — the pool bytes are untouched)
-        and is marked seen; prewarmed buckets count in
-        ``stats['prewarmed_buckets']``, not as dispatches or cache
-        misses. Returns how many buckets were newly warmed."""
+        shape buckets. Three sources, most to least automatic:
+
+        * ``None`` (default) — this transport's own online
+          ``bucket_learner``: the decayed/merged/widened histogram of
+          every dispatch so far. No recorded tape needed — on a live
+          engine this is "warm the buckets my own traffic predicts".
+        * another transport's ``bucket_learner`` (any iterable of
+          (slots, chunk) pairs, which a ``BucketLearner`` is) — carry a
+          learned profile from one engine to a fresh one.
+        * a previous run's ``stats['bucket_hist']`` (keys accepted
+          verbatim) or explicit pairs — the original replay path.
+
+        Each bucket executes one all-zero descriptor table (padded rows
+        are masked no-ops — the pool bytes are untouched) and is marked
+        seen; prewarmed buckets count in ``stats['prewarmed_buckets']``,
+        not as dispatches or cache misses. Oversized chunk keys are
+        clamped exactly like ``shape_buckets`` clamps real batches.
+        Returns how many buckets were newly warmed."""
+        if buckets is None:
+            buckets = self.bucket_learner
         new = 0
         pool_cap = _next_pow2(self.pool.shape[1])
         for b in buckets:
@@ -387,7 +413,8 @@ class LocalTransport(_TransportBase):
             return
         desc, chunk = pack_descriptors(plan, self.pool.shape[1])
         self._run_descriptors(desc, chunk)
-        self._account((desc.shape[0], chunk), len(plan))
+        self._account((desc.shape[0], chunk), len(plan),
+                      max_len=max((e[5] for e in plan), default=0))
 
     def execute_batch_static(self, plan: Sequence[tuple]) -> None:
         """Seed executor: plan baked in as a static jit argument (one XLA
@@ -443,7 +470,8 @@ class ICITransport(_TransportBase):
             return
         desc, chunk = pack_descriptors(plan, self.pool.shape[1])
         self._run_descriptors(desc, chunk)
-        self._account((desc.shape[0], chunk), len(plan))
+        self._account((desc.shape[0], chunk), len(plan),
+                      max_len=max((e[5] for e in plan), default=0))
 
     def execute_batch_static(self, plan: Sequence[tuple]) -> None:
         """Seed executor (static plan -> recompiles); parity reference."""

@@ -372,10 +372,16 @@ class StreamDispatcher:
     so the ring can never wedge.
     """
 
-    def __init__(self, block, ring, table: MatchTable, burst: int = 32):
+    def __init__(self, block, ring, table: MatchTable,
+                 burst: Optional[int] = None):
         self.block = block
         self.ring = ring
         self.table = table
+        # burst defaults from the block's TransportTuning (the autotuner's
+        # ring_burst knob); an explicit value still wins for this plane
+        if burst is None:
+            burst = getattr(block, "tuning", None).ring_burst \
+                if getattr(block, "tuning", None) is not None else 32
         self.burst = max(1, int(burst))
         self.handlers: Dict[int, _HandlerBinding] = {}
         self.chains: Dict[int, _ChainBinding] = {}   # keyed by Chain.tag

@@ -86,13 +86,19 @@ class RXRing:
     """
 
     def __init__(self, engine, peer: int = 0, base: int = None,
-                 depth: int = 64, slot_bytes: int = HDR_BYTES,
+                 depth: Optional[int] = None, slot_bytes: int = HDR_BYTES,
                  policy: str = "drop"):
         if policy not in ("drop", "backpressure"):
             raise ValueError(
                 f"policy must be drop|backpressure, got {policy!r}")
         self.engine = engine
         self.peer = peer
+        # depth defaults from the engine's TransportTuning (rx_depth — a
+        # layout knob the tuner records but does not sweep: resizing a
+        # live ring would drop in-flight slots)
+        if depth is None:
+            tuning = getattr(engine, "tuning", None)
+            depth = tuning.rx_depth if tuning is not None else 64
         self.depth = int(depth)
         self.slot_bytes = int(slot_bytes)
         self.base = (engine.pool_size // 2 - self.depth * self.slot_bytes

@@ -1,0 +1,347 @@
+"""Self-tuning transport (PR 10): the online bucket learner, the
+``prewarm`` edge cases it sits on, the one ``TransportTuning`` knob
+surface threaded through engine/lookaside/streaming, the per-QP flush
+window, and the deterministic auto-sweep tuner."""
+import numpy as np
+import pytest
+
+from repro.core.lookaside.registry import LookasideBlock
+from repro.core.rdma.autotune import (AutoTuner, BucketLearner,
+                                      TransportTuning, TuningGrid)
+from repro.core.rdma.doorbell import schedule_plan
+from repro.core.rdma.engine import RDMAEngine
+from repro.core.rdma.simulator import predict_from_stats
+from repro.core.rdma.verbs import Opcode, WQE
+from repro.core.streaming.rx_ring import RXRing
+
+POOL = 4096
+
+
+def _engine(**kw):
+    kw.setdefault("n_peers", 2)
+    kw.setdefault("pool_size", POOL)
+    return RDMAEngine(**kw)
+
+
+def _post_reads(eng, qp, mr, lengths, rng=None):
+    rng = rng or np.random.default_rng(0)
+    for i, ln in enumerate(lengths):
+        eng.post_send(qp, WQE(
+            Opcode.READ, qp.qp_num, wr_id=i,
+            local_addr=int(rng.integers(0, POOL // 4 - ln)),
+            remote_addr=int(rng.integers(0, POOL // 4 - ln)),
+            length=int(ln), rkey=mr.rkey))
+
+
+# ---------------------------------------------------------------------------
+# BucketLearner
+# ---------------------------------------------------------------------------
+
+class TestBucketLearner:
+    def test_observe_and_predict_roundtrip(self):
+        bl = BucketLearner()
+        bl.observe(8, 32, n_wqes=3, max_len=20)
+        assert bl.buckets() == [(8, 32)]
+        assert (8, 32) in bl.predict()
+
+    def test_pow2_adjacent_spans_merge_with_counter(self):
+        bl = BucketLearner()
+        bl.observe(8, 16)
+        bl.observe(8, 32)                    # adjacent pow2: one span
+        assert bl.stats["bucket_merges"] == 1
+        assert bl.buckets() == [(8, 16), (8, 32)]   # span covers both
+        bl.observe(8, 64)
+        assert bl.stats["bucket_merges"] == 2
+        assert (8, 64) in bl.buckets()
+
+    def test_distant_chunks_stay_separate_spans(self):
+        bl = BucketLearner()
+        bl.observe(8, 16)
+        bl.observe(8, 1024)                  # not adjacent: no merge
+        assert bl.stats["bucket_merges"] == 0
+        assert bl.buckets() == [(8, 16), (8, 1024)]
+
+    def test_decay_evicts_stale_buckets_with_counter(self):
+        bl = BucketLearner(decay=0.5, min_weight=0.1)
+        bl.observe(8, 16)
+        for _ in range(8):                   # 0.5^8 << 0.1: (8,16) ages out
+            bl.observe(64, 1024)
+        assert bl.stats["bucket_decay_events"] >= 1
+        assert (8, 16) not in bl.buckets()
+        assert (64, 1024) in bl.buckets()
+
+    def test_current_bucket_never_self_evicts(self):
+        bl = BucketLearner(decay=0.5, min_weight=0.1)
+        for _ in range(20):                  # weight decays each observe,
+            bl.observe(8, 16)                # but the live bucket stays
+        assert (8, 16) in bl.buckets()
+        assert bl.stats["bucket_decay_events"] == 0
+
+    def test_fill_widens_chunk_axis_one_pow2_up(self):
+        bl = BucketLearner(widen_threshold=0.75)
+        bl.observe(8, 64, n_wqes=2, max_len=48)      # 48/64 = 0.75 fill
+        assert (8, 128) in bl.predict()
+        assert (8, 128) not in bl.buckets()          # prediction, not data
+
+    def test_low_fill_does_not_widen(self):
+        bl = BucketLearner(widen_threshold=0.75)
+        bl.observe(8, 64, n_wqes=2, max_len=20)
+        assert (8, 128) not in bl.predict()
+
+    def test_full_slots_widen_slot_axis(self):
+        bl = BucketLearner(widen_threshold=0.75)
+        bl.observe(8, 32, n_wqes=8, max_len=10)      # 8/8 slots full
+        assert (16, 32) in bl.predict()
+
+    def test_stats_dict_is_shared_surface(self):
+        stats = {"bucket_decay_events": 0, "bucket_merges": 0,
+                 "learned_buckets": 0}
+        bl = BucketLearner(stats=stats)
+        bl.observe(8, 16)
+        bl.observe(8, 32)
+        assert stats["bucket_merges"] == 1
+        assert stats["learned_buckets"] == 2
+
+
+# ---------------------------------------------------------------------------
+# transport.prewarm edge cases (the path the learner sits on)
+# ---------------------------------------------------------------------------
+
+class TestPrewarmEdgeCases:
+    def test_oversized_chunk_key_clamped_like_shape_buckets(self):
+        eng = _engine()
+        t = eng.transport
+        assert t.prewarm(["8x8192"]) == 1    # pool 4096: clamps to 4096
+        assert (8, POOL) in t._seen_buckets
+        assert (8, 8192) not in t._seen_buckets
+        assert t.stats["prewarmed_buckets"] == 1
+
+    def test_duplicate_keys_not_double_counted(self):
+        eng = _engine()
+        t = eng.transport
+        n = t.prewarm(["8x16", "8x16", (8, 16), ("8", "16")])
+        assert n == 1
+        assert t.stats["prewarmed_buckets"] == 1
+        # clamped duplicates collapse onto the same key too
+        assert t.prewarm(["8x8192", (8, 4096), "8x999999"]) == 1
+        assert t.stats["prewarmed_buckets"] == 2
+
+    def test_prewarmed_vs_seen_vs_hit_accounting(self):
+        eng = _engine()
+        t = eng.transport
+        t.prewarm([(8, 16)])
+        assert t.stats["prewarmed_buckets"] == 1
+        assert t.stats["dispatches"] == 0    # prewarm is not a dispatch
+        assert t.stats["cache_misses"] == 0
+        t.execute_batch([("xfer", 0, 1, 0, 64, 7)])   # keys on (8, 16)
+        assert t.stats["cache_hits"] == 1    # prewarm made it a hit
+        assert t.stats["cache_misses"] == 0
+        assert t.stats["prewarmed_buckets"] == 1      # unchanged
+        assert t._seen_buckets == {(8, 16)}
+
+    def test_prewarm_none_reads_own_learner(self):
+        eng = _engine()
+        t = eng.transport
+        t.execute_batch([("xfer", 0, 1, 0, 64, 7)])
+        assert t.prewarm() == 0              # own traffic already compiled
+        # widened predictions ARE newly warmed: near-full chunk fill
+        t.execute_batch([("xfer", 0, 1, i * 16, 2048 + i * 16, 15)
+                         for i in range(8)])  # (8,16) @ 15/16 fill, 8/8
+        assert t.prewarm() > 0               # (8,32)/(16,*) widened out
+
+    def test_prewarm_from_another_transports_learner(self):
+        a, b = _engine().transport, _engine().transport
+        a.execute_batch([("xfer", 0, 1, 0, 64, 30)])
+        assert b.prewarm(a.bucket_learner) >= 1
+        b.execute_batch([("xfer", 0, 1, 8, 80, 30)])
+        assert b.stats["cache_misses"] == 0
+
+    def test_prewarm_leaves_pool_bytes_untouched(self):
+        eng = _engine()
+        eng.transport.host_write(0, 0, np.arange(32, dtype=np.float32))
+        before = np.asarray(eng.transport.pool).copy()
+        eng.transport.prewarm(["8x64", "16x128"])
+        assert np.array_equal(np.asarray(eng.transport.pool), before)
+
+
+# ---------------------------------------------------------------------------
+# TransportTuning threading (the consolidated knob surface)
+# ---------------------------------------------------------------------------
+
+class TestTuningThreading:
+    def test_engine_defaults_are_historical_hand_picked_values(self):
+        eng = _engine()
+        assert eng.tuning == TransportTuning()
+        assert eng.tuning.ring_burst == 32
+        assert eng.tuning.pipeline_depth == 1
+        assert eng.flush_budget is None and eng.qp_window is None
+
+    def test_explicit_kwargs_win_over_tuning(self):
+        eng = _engine(flush_budget=8,
+                      tuning=TransportTuning(flush_budget=4, qp_window=2))
+        assert eng.flush_budget == 8         # kwarg wins
+        assert eng.qp_window == 2            # tuning fills the rest
+
+    def test_tuning_seeds_flush_budget_and_window(self):
+        eng = _engine(tuning=TransportTuning(flush_budget=6, qp_window=3))
+        assert eng.flush_budget == 6 and eng.qp_window == 3
+
+    def test_apply_tuning_updates_live_knobs(self):
+        eng = _engine()
+        eng.apply_tuning(TransportTuning(flush_budget=16, qp_window=4))
+        assert eng.flush_budget == 16 and eng.qp_window == 4
+        assert eng.tuning.flush_budget == 16
+
+    def test_block_inherits_engine_tuning_pipeline_depth(self):
+        eng = _engine(tuning=TransportTuning(pipeline_depth=4))
+        blk = LookasideBlock(eng)
+        assert blk.pipeline_depth == 4
+        assert blk.tuning.pipeline_depth == 4
+        explicit = LookasideBlock(_engine(
+            tuning=TransportTuning(pipeline_depth=4)), pipeline_depth=2)
+        assert explicit.pipeline_depth == 2  # explicit kwarg wins
+
+    def test_registry_line96_hardcode_is_gone(self):
+        """The satellite fix: ring_burst threads from TransportTuning
+        instead of the old ``self.ring_burst = 32`` literal."""
+        eng = _engine(tuning=TransportTuning(ring_burst=8))
+        blk = LookasideBlock(eng)
+        k = blk.register(1, lambda ctx: None)
+        assert k.ring_burst == 8             # from tuning, not hardcoded
+        k2 = blk.register(2, lambda ctx: None, ring_burst=64)
+        assert k2.ring_burst == 64           # explicit still wins
+
+    def test_attach_ring_none_burst_keeps_tuned_value(self):
+        eng = _engine(pool_size=16384,
+                      tuning=TransportTuning(ring_burst=8))
+        blk = LookasideBlock(eng)
+
+        def fn(ctx, start, count):
+            return None
+
+        blk.register(1, fn)
+        ring = RXRing(eng, peer=0)
+        out_mr = eng.register_mr(0, 0, 512)
+        k = blk.attach_ring(1, ring, 0, out_mr.rkey, 0)
+        assert k.ring_burst == 8             # tuned default preserved
+        assert k.dispatcher.burst == 8
+        k_explicit = blk.register(2, fn)
+        blk.attach_ring(2, RXRing(eng, peer=0, base=0), 0, out_mr.rkey,
+                        0, burst=4)
+        assert k_explicit.ring_burst == 4    # explicit still wins
+
+    def test_rx_ring_depth_from_tuning(self):
+        eng = _engine(pool_size=16384,
+                      tuning=TransportTuning(rx_depth=16))
+        ring = RXRing(eng, peer=0)
+        assert ring.depth == 16
+        assert RXRing(eng, peer=0, depth=8).depth == 8   # explicit wins
+        assert RXRing(_engine(pool_size=16384), peer=0).depth == 64
+
+
+# ---------------------------------------------------------------------------
+# qp_window (the per-QP flush share bound)
+# ---------------------------------------------------------------------------
+
+class TestQPWindow:
+    def test_schedule_plan_caps_per_qp_picks(self):
+        windows = [(1, list(range(6))), (2, list(range(2)))]
+        order, counts = schedule_plan(windows, scheduler="fifo",
+                                      qp_window=2)
+        assert counts == {1: 2, 2: 2}
+        assert [e for q, e in order if q == 1] == [0, 1]   # prefix rule
+
+    def test_qp_window_is_orthogonal_to_budget(self):
+        windows = [(1, list(range(6))), (2, list(range(6)))]
+        _, counts = schedule_plan(windows, scheduler="rr", budget=10,
+                                  qp_window=3)
+        assert counts == {1: 3, 2: 3}        # window binds before budget
+        _, counts = schedule_plan(windows, scheduler="rr", budget=4,
+                                  qp_window=3)
+        assert sum(counts.values()) == 4     # budget binds when tighter
+
+    def test_engine_flush_respects_qp_window(self):
+        eng = _engine(qp_window=2, scheduler="fifo")
+        mr = eng.register_mr(1, 0, 1024)
+        qp = eng.create_qp(0, 1)
+        _post_reads(eng, qp, mr, [8] * 6)
+        eng.ring_sq_doorbell(qp, defer=True)
+        assert eng.flush_doorbells() == {qp.qp_num: 2}
+        assert qp.pending_count == 4         # leftovers stay armed
+        assert eng.flush_doorbells() == {qp.qp_num: 2}
+
+    def test_window_limit_is_min_of_budget_and_window(self):
+        assert _engine()._window_limit() is None
+        assert _engine(flush_budget=8)._window_limit() == 8
+        assert _engine(qp_window=4)._window_limit() == 4
+        assert _engine(flush_budget=8, qp_window=4)._window_limit() == 4
+        assert _engine(flush_budget=2, qp_window=4)._window_limit() == 2
+
+
+# ---------------------------------------------------------------------------
+# AutoTuner (small grids: the full sweep lives in bench_autotune)
+# ---------------------------------------------------------------------------
+
+SMALL_GRID = TuningGrid(ring_burst=(16, 32), pipeline_depth=(1, 2),
+                        flush_budget=(None,), qp_window=(None,))
+
+
+class TestAutoTuner:
+    def _live_engine(self):
+        eng = _engine()
+        mr = eng.register_mr(1, 0, 1024)
+        qp = eng.create_qp(0, 1)
+        _post_reads(eng, qp, mr, [7, 20, 33])
+        eng.ring_sq_doorbell(qp)
+        return eng
+
+    def test_trials_are_memoized_per_point(self):
+        eng = self._live_engine()
+        tuner = AutoTuner(eng, grid=SMALL_GRID, seed=3, passes=1, rows=16)
+        a = tuner.measure(TransportTuning())
+        b = tuner.measure(TransportTuning())
+        assert a is b
+        assert len(tuner.surface) == 1
+
+    def test_sweep_result_lands_in_engine_stats(self):
+        eng = self._live_engine()
+        tuner = AutoTuner(eng, grid=SMALL_GRID, seed=3, passes=1, rows=16)
+        chosen = tuner.sweep()
+        at = eng.stats["autotune"]
+        assert at["chosen"] == chosen.as_dict()
+        assert at["seed"] == 3
+        assert at["trials"] == len(at["surface"]) == len(tuner.surface)
+        assert at["score"] >= at["default_score"]          # grid holds
+        assert at["improvement"] >= 1.0 - 1e-9             # the default
+        assert eng.tuning == chosen          # sweep() applied it
+
+    def test_same_seed_sweeps_choose_identically(self):
+        eng = self._live_engine()
+        c1 = AutoTuner(eng, grid=SMALL_GRID, seed=5, passes=1,
+                       rows=16).sweep(apply=False)
+        c2 = AutoTuner(eng, grid=SMALL_GRID, seed=5, passes=1,
+                       rows=16).sweep(apply=False)
+        assert c1 == c2
+
+    def test_trial_counts_not_wallclock_drive_the_score(self):
+        eng = self._live_engine()
+        tuner = AutoTuner(eng, grid=SMALL_GRID, seed=3, passes=1, rows=16)
+        res = tuner.measure(TransportTuning())
+        assert res.score == pytest.approx(res.rows / res.modeled_s)
+        assert res.modeled_s > 0 and res.wall_s > 0
+        assert res.flushes > 0 and res.wqes > 0
+
+    def test_predict_from_stats_threads_autotune_terms(self):
+        eng = self._live_engine()
+        AutoTuner(eng, grid=SMALL_GRID, seed=3, passes=1, rows=16).sweep()
+        out = predict_from_stats(eng.stats, payload=128)
+        assert out["autotune_trials"] >= 3
+        assert out["autotune_improvement"] >= 1.0 - 1e-9
+        assert out["autotune_chosen_ring_burst"] in (16.0, 32.0)
+        assert out["learned_buckets"] >= 1.0
+
+    def test_stats_without_autotune_have_no_terms(self):
+        eng = self._live_engine()
+        out = predict_from_stats(eng.stats, payload=128)
+        assert "autotune_trials" not in out
+        assert out["learned_buckets"] >= 1.0  # learner always observes
